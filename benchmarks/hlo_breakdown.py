@@ -1,0 +1,119 @@
+"""Per-instruction HBM/collective breakdown of a dry-run cell (the
+profiling tool of the §Perf loop — our 'profile' is the lowered module).
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown --arch deepseek-v3-671b \
+        --shape train_4k [--multi] [--top 25]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from typing import List, Tuple
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import ShardingRules
+from repro.launch.specs import input_specs
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+
+
+def compile_cell(arch: str, shape: str, multi_pod: bool = False,
+                 grad_accum: int = 8):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh)
+    kind, specs = input_specs(cfg, shape)
+
+    def shard(tree, spec_fn):
+        return jax.tree.map(
+            lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+            tree, rules.named(spec_fn(tree)))
+
+    with mesh:
+        if kind == "train":
+            fn = make_train_step(cfg, grad_accum=grad_accum)
+            args = (shard(specs["params"], rules.params_pspecs),
+                    shard(specs["opt_state"], rules.params_pspecs),
+                    shard(specs["batch"], rules.batch_specs))
+            jfn = jax.jit(fn, donate_argnums=(0, 1))
+        elif kind == "prefill":
+            fn = make_prefill_step(cfg)
+            args = (shard(specs["params"], rules.params_pspecs),
+                    shard(specs["batch"], rules.batch_specs))
+            jfn = jax.jit(fn)
+        else:
+            fn = make_serve_step(cfg)
+            args = (shard(specs["params"], rules.params_pspecs),
+                    shard(specs["state"], rules.cache_specs),
+                    shard(specs["inp"], rules.batch_specs))
+            jfn = jax.jit(fn, donate_argnums=(1,))
+        return jfn.lower(*args).compile()
+
+
+def breakdown(hlo: str, top: int = 25) -> Tuple[List, dict]:
+    an = H.HLOAnalyzer(hlo)
+    totals = an.analyze()
+    # multipliers per computation
+    mults = {an.entry: 1.0}
+    queue = [an.entry]
+    while queue:
+        cname = queue.pop(0)
+        comp = an.comps[cname]
+        m = mults[cname]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                trips = an.trip_count(ins, comp, cond.group(1)) if cond else 1
+                if body and body.group(1) not in mults:
+                    mults[body.group(1)] = m * trips
+                    queue.append(body.group(1))
+    rows = []
+    for cname, m in mults.items():
+        comp = an.comps[cname]
+        for ins in comp.instrs:
+            if ins.opcode in H._NO_TRAFFIC or ins.opcode == "while":
+                continue
+            if ins.opcode == "fusion":
+                mm = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                b = an._fusion_traffic(ins, comp, mm.group(1) if mm else None)
+            else:
+                b = H._shape_nbytes(ins.type_str)
+                for o in ins.operands:
+                    oi = comp.by_name.get(o)
+                    if oi is not None and oi.opcode not in (
+                            "constant", "tuple", "get-tuple-element"):
+                        b += H._shape_nbytes(oi.type_str)
+            rows.append((b * m, b, m, ins.opcode, ins.type_str[:60],
+                         cname[:40]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:top], totals
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--grad-accum", type=int, default=8)
+    args = ap.parse_args()
+    compiled = compile_cell(args.arch, args.shape, args.multi, args.grad_accum)
+    rows, totals = breakdown(compiled.as_text(), args.top)
+    mem = compiled.memory_analysis()
+    print(f"temp/device: {mem.temp_size_in_bytes/2**30:.2f} GiB  "
+          f"args: {mem.argument_size_in_bytes/2**30:.2f} GiB")
+    print({k: (f"{v/2**30:.1f} GiB" if "bytes" in k else f"{v:.3e}")
+           for k, v in totals.items()
+           if k in ("flops", "hbm_bytes", "collective_bytes")})
+    for r in rows:
+        print(f"{r[0]/2**30:9.2f} GiB ({r[1]/2**20:9.1f} MiB x{r[2]:6.0f}) "
+              f"{r[3]:14s} {r[4]:60s} {r[5]}")
+
+
+if __name__ == "__main__":
+    main()

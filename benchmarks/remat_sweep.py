@@ -1,0 +1,72 @@
+"""Rematerialization sweep (paper §2.3): peak memory + recompute overhead
+as the memory limit tightens, on the Llama train step with dynamic shapes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import optimize, symbolic_dims
+from repro.core.executor.memory import MemoryLimitExceeded
+from repro.launch.steps import adamw_config_for, make_train_step
+from repro.models import init_params
+from repro.optim import init_state
+
+
+def run(fractions=(1.0, 0.85, 0.7, 0.6, 0.55), steps: int = 3) -> List[Dict]:
+    cfg = dataclasses.replace(get_smoke_config("llama2_1b"), scan_layers=False)
+    step = make_train_step(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_state(params, adamw_config_for(cfg))
+    B, S = symbolic_dims("b, s")
+    p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    o = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt_state)
+    batch_spec = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                  "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                  "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+    opt = optimize(step, p, o, batch_spec)
+
+    rng = np.random.RandomState(0)
+    batches = []
+    for i in range(steps):
+        b, s = 4, int(40 + 24 * i)
+        t = jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32)
+        batches.append({"tokens": t, "labels": t,
+                        "mask": jnp.ones((b, s), jnp.float32)})
+    # free-run peak
+    peak = 0
+    for bt in batches:
+        opt(params, opt_state, bt)
+        peak = max(peak, opt.last_report.stats.device_peak)
+
+    rows: List[Dict] = []
+    for frac in fractions:
+        lim = opt.with_memory_limit(int(peak * frac))
+        rec: Dict = dict(fraction=frac, limit=int(peak * frac), peak=0,
+                         evictions=0, recomputes=0, offloads=0,
+                         recompute_flops=0, ok=True)
+        try:
+            for bt in batches:
+                lim(params, opt_state, bt)
+                st = lim.last_report.stats
+                rec["peak"] = max(rec["peak"], st.device_peak)
+                rec["evictions"] += st.evictions
+                rec["recomputes"] += st.recomputes
+                rec["offloads"] += st.offloads
+                rec["recompute_flops"] += st.recompute_flops
+        except MemoryLimitExceeded:
+            rec["ok"] = False
+        rows.append(rec)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"limit={100*r['fraction']:4.0f}%  peak={r['peak']/2**20:7.1f} MiB  "
+              f"evict={r['evictions']:3d} recompute={r['recomputes']:3d} "
+              f"offload={r['offloads']:3d} extra_flops={r['recompute_flops']:.2e} "
+              f"{'ok' if r['ok'] else 'OOM'}")

@@ -1,0 +1,115 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs            / (chips × 197 TFLOP/s bf16)
+    memory term     = HLO_bytes (scaled)   / (chips × 819 GB/s HBM)
+    collective term = collective_bytes     / (chips × 50 GB/s ICI/link)
+
+FLOPs / bytes / collective bytes come from the trip-count-scaled HLO
+analysis of the *per-device* partitioned module (see
+repro/launch/hlo_analysis.py), so terms are already per-chip.
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) global, /chips.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    n = cfg.param_count(active_only=cfg.n_experts > 0)
+    if spec["kind"] == "train":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 6.0 * n * tokens
+    if spec["kind"] == "prefill":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * spec["global_batch"]
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    sc = rec.get("scaled", {})
+    flops = sc.get("flops", 0.0)
+    hbm = sc.get("hbm_bytes", 0.0)
+    coll = sc.get("collective_bytes", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_n = coll / LINK_BW
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+                   key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    mem = rec.get("memory", {})
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=t_c, memory_s=t_m, collective_s=t_n,
+        dominant=dominant,
+        model_flops_per_chip=mf,
+        useful_flop_ratio=(mf / flops) if flops else 0.0,
+        mem_per_device_gib=mem.get("total_per_device_bytes", 0) / 2**30,
+        fits_hbm=mem.get("total_per_device_bytes", 0) <= 16 * 2**30,
+        # roofline fraction: how close the compute term is to being the
+        # step's runtime if the dominant term set the pace
+        roofline_fraction=(t_c / max(t_c, t_m, t_n)) if (t_c or t_m or t_n) else 0.0,
+    )
+
+
+def load_all(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        row = analyze_record(rec)
+        if row is None:
+            rows.append(dict(arch=rec.get("arch"), shape=rec.get("shape"),
+                             mesh=rec.get("mesh"),
+                             skipped=rec.get("skip_reason",
+                                             rec.get("error", "?"))[:60]))
+        else:
+            rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful-FLOP ratio | mem/dev GiB | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | skipped: {r['skipped']} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['useful_flop_ratio']:.2f} | {r['mem_per_device_gib']:.2f} "
+            f"| {'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def run(dryrun_dir: str = "experiments/dryrun"):
+    return load_all(dryrun_dir)
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print(to_markdown(rows))
+    out = "experiments/roofline.md"
+    with open(out, "w") as f:
+        f.write(to_markdown(rows) + "\n")
+    print(f"\nwritten {out}")

@@ -1,0 +1,69 @@
+"""Benchmark harness: one entry per paper table + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+import argparse
+import sys
+import time
+
+
+def _timed(name, fn, derived_fn):
+    t0 = time.time()
+    rows = fn()
+    dt = (time.time() - t0) * 1e6
+    print(f"{name},{dt:.0f},{derived_fn(rows)}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller step counts (CI)")
+    args = ap.parse_args()
+    steps = 6 if args.fast else 12
+
+    from benchmarks import (remat_sweep, roofline, scheduler_micro,
+                            symbolic_coverage, table1_dynamic_training)
+
+    # paper Table 1: dynamic vs static vs BladeDISC++ training
+    rows = _timed(
+        "table1_dynamic_training",
+        lambda: table1_dynamic_training.run(steps=steps),
+        lambda rs: ";".join(
+            f"{r['system']}@b{r['batch']}:"
+            f"{'OOM' if r['oom'] else f'{r['peak']/2**20:.0f}MiB'}"
+            for r in rs))
+    print(table1_dynamic_training.format_rows(rows), file=sys.stderr)
+
+    # §2.2: scheduling peak-memory reductions
+    _timed("scheduler_micro", scheduler_micro.run,
+           lambda rs: ";".join(f"{r['graph']}:{100*r['reduction']:.0f}%"
+                               for r in rs))
+
+    # §2.3: remat limit sweep
+    _timed("remat_sweep", remat_sweep.run,
+           lambda rs: ";".join(
+               f"{int(100*r['fraction'])}%:{'ok' if r['ok'] else 'OOM'}"
+               for r in rs))
+
+    # symbolic comparability across architectures
+    _timed("symbolic_coverage", symbolic_coverage.run,
+           lambda rs: ";".join(f"{r['arch']}:{100*r['symbolic_frac']:.0f}%"
+                               for r in rs))
+
+    # roofline readout from the dry-run artifacts (if present)
+    try:
+        rows = roofline.run()
+        ok = [r for r in rows if "skipped" not in r]
+        dom = {}
+        for r in ok:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        print(f"roofline,0,cells={len(ok)};" +
+              ";".join(f"{k}:{v}" for k, v in sorted(dom.items())))
+    except Exception as e:
+        print(f"roofline,0,unavailable({e})")
+
+
+if __name__ == "__main__":
+    main()

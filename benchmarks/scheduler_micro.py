@@ -1,0 +1,80 @@
+"""Op-scheduling micro-benchmark (paper §2.2, Listing-1-style graphs).
+
+Builds graphs where the traced program order hoists large allocations far
+from their consumers (the pattern the paper's Listing 1 shows: broadcasts
+%1084/%1085 placed early).  Measures exact peak memory of the original
+order vs the symbolic schedule across dim bindings the trace never saw.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import symbolic_dims
+from repro.core.ir import trace_to_graph
+from repro.core.scheduling import schedule_graph, simulate_peak
+from repro.core.symbolic import ShapeGraph
+
+
+def listing1_style(arg0, w):
+    """Large broadcasts created early, consumed late (bad program order)."""
+    big1 = jnp.outer(arg0, jnp.ones((1024,), arg0.dtype))      # S0 x 1024
+    big2 = jnp.outer(jnp.ones((11008,), arg0.dtype), arg0)     # 11008 x S0
+    x2 = arg0.reshape(-1, 12)                                   # S1 x 12
+    x3 = x2 @ w                                                 # S1 x 11008
+    x4 = x3.sum(axis=1)                                         # S1
+    y = (x4 ** 2).sum()
+    return y + big1.sum() + big2.sum()
+
+
+def chain_with_parallel_branches(x, w1, w2):
+    """Two fat branches that should be evaluated one at a time."""
+    a = jax.nn.relu(x @ w1)            # branch A allocations
+    b = jax.nn.relu(x @ w2)
+    a2 = a.sum(axis=-1)
+    b2 = b.sum(axis=-1)
+    return (a2 * b2).sum()
+
+
+def run() -> List[Dict]:
+    rows = []
+    s1, = symbolic_dims("s1")
+    g, _ = trace_to_graph(
+        listing1_style,
+        jax.ShapeDtypeStruct((12 * s1,), jnp.float32),
+        jax.ShapeDtypeStruct((12, 11008), jnp.float32))
+    t0 = time.time()
+    res = schedule_graph(g, ShapeGraph())
+    sched_ms = (time.time() - t0) * 1000
+    for s1v in (64, 256, 1024):
+        env = {"s1": s1v}
+        before = simulate_peak(g, g.nodes, env).peak_bytes
+        after = simulate_peak(g, res.order, env).peak_bytes
+        rows.append(dict(graph="listing1", s1=s1v, before=before, after=after,
+                         reduction=1 - after / before, sched_ms=sched_ms,
+                         sym_frac=res.decision_symbolic_fraction))
+
+    b, s = symbolic_dims("b, s")
+    g2, _ = trace_to_graph(
+        chain_with_parallel_branches,
+        jax.ShapeDtypeStruct((b, s, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64, 4096), jnp.float32),
+        jax.ShapeDtypeStruct((64, 4096), jnp.float32))
+    res2 = schedule_graph(g2, ShapeGraph())
+    for env in ({"b": 4, "s": 128}, {"b": 16, "s": 512}):
+        before = simulate_peak(g2, g2.nodes, env).peak_bytes
+        after = simulate_peak(g2, res2.order, env).peak_bytes
+        rows.append(dict(graph="branches", s1=env["s"], before=before,
+                         after=after, reduction=1 - after / before,
+                         sched_ms=0, sym_frac=res2.decision_symbolic_fraction))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['graph']:10s} dim={r['s1']:5d} peak {r['before']:>12,} -> "
+              f"{r['after']:>12,}  (-{100*r['reduction']:.1f}%)  "
+              f"symbolic={100*r['sym_frac']:.0f}%")

@@ -1,0 +1,15 @@
+"""Batched serving demo across architecture families: dense GQA (llama),
+MQA (gemma), MLA+MoE (deepseek), recurrent (xlstm), hybrid (hymba).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.configs import get_smoke_config
+from repro.launch.serve import serve
+
+for arch in ["llama2-1b", "gemma-2b", "deepseek-v3-671b", "xlstm-1.3b",
+             "hymba-1.5b"]:
+    cfg = get_smoke_config(arch)
+    r = serve(cfg, batch=4, prompt_len=16, gen=8)
+    print(f"{arch:18s} prefill {1000*r['prefill_s']:7.1f} ms | "
+          f"decode {r['decode_tok_per_s']:8.1f} tok/s | "
+          f"sample {r['tokens'][0][:5].tolist() if r['tokens'] is not None else '-'}")

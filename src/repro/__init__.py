@@ -1,0 +1,4 @@
+"""BladeDISC++ reproduction: memory optimizations based on symbolic shape,
+as a multi-pod JAX training/inference framework.  See README.md."""
+
+__version__ = "1.0.0"

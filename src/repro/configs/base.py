@@ -1,0 +1,166 @@
+"""ModelConfig: one dataclass describes every assigned architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    ffn_kind: str = "swiglu"       # swiglu | geglu
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+
+    # attention
+    attn_kind: str = "gqa"         # gqa | mla
+    window: Optional[int] = None   # sliding-window size (hybrid layers)
+    global_every: int = 0          # hybrid: every k-th layer uses global attn
+
+    # MLA (deepseek-style)
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+    r_kv: int = 512
+    r_q: int = 1536
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    moe_capacity: float = 1.25
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+
+    # xLSTM
+    block_kind: str = "transformer"  # transformer | xlstm
+    slstm_every: int = 8             # every k-th layer is sLSTM
+    xlstm_proj_factor: float = 2.0
+
+    # modality frontend (stub): tokens | embeddings | vlm
+    input_mode: str = "tokens"
+    n_codebooks: int = 0           # musicgen-style multi-head output
+    vis_tokens: int = 256          # vlm: stub patch-embedding count
+
+    # training / memory knobs
+    remat_policy: str = "block"    # none | block | full
+    optimizer_dtype: str = "float32"  # bf16 option for the 1T-class configs
+    scan_layers: bool = True       # False: python-unrolled (the dynamic-shape
+    #                                optimizer path needs a flat graph)
+
+    # embedding-table padding: vocab dims that don't divide the model axis
+    # (92553, 32001, ...) would force replicated embeddings + optimizer
+    # states; tables are padded to this boundary (pad logits masked to -inf)
+    pad_vocab_to: int = 128
+
+    # -- derived ----------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab // self.pad_vocab_to) * self.pad_vocab_to
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jax_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def mla_config(self):
+        from ..models.mla import MLAConfig
+        return MLAConfig(d_model=self.d_model, n_heads=self.n_heads,
+                         qk_nope=self.qk_nope, qk_rope=self.qk_rope,
+                         v_dim=self.v_dim, r_kv=self.r_kv, r_q=self.r_q,
+                         rope_theta=self.rope_theta)
+
+    def ssm_config(self):
+        from ..models.ssm import SSMConfig
+        return SSMConfig(d_model=self.d_model,
+                         d_inner=self.ssm_expand * self.d_model,
+                         d_state=self.ssm_state or 16)
+
+    def xlstm_config(self):
+        from ..models.xlstm import XLSTMConfig
+        return XLSTMConfig(d_model=self.d_model, n_heads=self.n_heads,
+                           proj_factor=self.xlstm_proj_factor)
+
+    def window_for_layer(self, layer: int) -> Optional[int]:
+        """hybrid archs: sliding window except periodic global layers."""
+        if self.window is None:
+            return None
+        if self.global_every and (layer % self.global_every == 0):
+            return None
+        return self.window
+
+    # -- parameter count (for roofline MODEL_FLOPS) -------------------------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, f, hd = self.d_model, self.d_ff, self.resolved_head_dim
+        if self.block_kind == "xlstm":
+            di = int(self.xlstm_proj_factor * d)
+            per_m = d * 2 * di + 3 * di * di + di * d + 2 * di * self.n_heads
+            per_s = 4 * d * di + di * d
+            n_s = self.n_layers // self.slstm_every if self.slstm_every else 0
+            layers = per_m * (self.n_layers - n_s) + per_s * n_s
+            return layers + self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.attn_kind == "mla":
+            attn = (d * self.r_q + self.r_q * self.n_heads * (self.qk_nope + self.qk_rope)
+                    + d * self.r_kv + self.r_kv * self.n_heads * (self.qk_nope + self.v_dim)
+                    + d * self.qk_rope + self.n_heads * self.v_dim * d)
+        else:
+            attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                + self.n_heads * hd * d
+        if self.n_experts:
+            expert = 3 * d * f
+            n_exp = self.top_k if active_only else self.n_experts
+            ffn = n_exp * expert + self.n_shared * expert + d * self.n_experts
+        else:
+            ffn = 3 * d * f
+        if self.family == "hybrid":
+            di = self.ssm_expand * d
+            r = -(-d // 16)
+            ffn += d * 2 * di + di * (r + 2 * (self.ssm_state or 16)) + r * di \
+                + di * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.n_codebooks:
+            emb += self.n_codebooks * d * self.vocab
+        return self.n_layers * (attn + ffn) + emb
+
+
+# -- input shape sets (assigned) ---------------------------------------------------
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+# long_500k requires sub-quadratic attention: only SSM/hybrid run it.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cells_for(cfg: ModelConfig):
+    """The (shape_name, spec) cells this arch runs; skips are recorded."""
+    out = []
+    for name, spec in SHAPES.items():
+        if name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES \
+                and cfg.block_kind != "xlstm":
+            out.append((name, dict(spec, skip="full-attention arch: no "
+                                   "sub-quadratic mechanism at 500k")))
+        else:
+            out.append((name, dict(spec, skip=None)))
+    return out

@@ -1,0 +1,10 @@
+"""BladeDISC++-style memory optimization for dynamic-shape JAX graphs.
+
+The paper's primary contribution lives here: symbolic shape analysis
+(``repro.core.symbolic``), the graph IR (``repro.core.ir``), op scheduling
+(``repro.core.scheduling``), rematerialization (``repro.core.remat``), and
+the runtime (``repro.core.executor``), wired together by :func:`optimize`.
+"""
+from .api import DynamicShapeFunction, OptimizeReport, optimize, symbolic_dim, symbolic_dims
+
+__all__ = ["DynamicShapeFunction", "OptimizeReport", "optimize", "symbolic_dim", "symbolic_dims"]

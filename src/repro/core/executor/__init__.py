@@ -1,0 +1,4 @@
+from .interpreter import PlanInterpreter, RunReport
+from .memory import MemoryLimitExceeded, MemoryManager, MemoryStats
+
+__all__ = ["PlanInterpreter", "RunReport", "MemoryLimitExceeded", "MemoryManager", "MemoryStats"]

@@ -1,0 +1,247 @@
+"""Op-by-op executor of an ExecutionPlan — the BladeDISC++ runtime analogue.
+
+Executes the scheduled graph on concrete arrays of *any* shape matching the
+symbolic trace (one compilation, no padding, no recompile), with:
+
+  * exact memory accounting through ``MemoryManager``;
+  * the evict check at op boundaries (paper's ``Remat::EvictOp``);
+  * materialize-on-demand regeneration (paper's ``Remat::RegenerateOp``),
+    by recompute subgraph or host reload, chosen by the runtime policy.
+
+Recompute-evicted tensors place a *hold* on each source of their recompute
+subgraph, so sources stay materializable (alive, offloaded, or recursively
+recomputable) until regeneration releases the hold.  This realises the
+compile-time impact accounting (bytes(target) − bytes(kept sources)) at
+runtime.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..ir.graph import Graph, Node, Value
+from ..ir.trace import refine_params, solve_env
+from ..remat.planner import ExecutionPlan
+from ..remat.runtime import RuntimeRematPolicy
+from .memory import MemoryManager, MemoryStats
+
+
+def _bind_node(node: Node, ins: Sequence[Any], params: Dict[str, Any]) -> List[Any]:
+    """Execute one primitive with refined (concrete) params.
+
+    A few shape-polymorphism helper primitives have no eager impl and are
+    evaluated directly from their params.
+    """
+    if node.prim_name == "dim_as_value":
+        # params['dim'] was already refined to a concrete int
+        return [jnp.asarray(params["dim"], jnp.int32)]
+    outs = node.prim.bind(*ins, **params)
+    return list(outs) if node.prim.multiple_results else [outs]
+
+
+@dataclass
+class RunReport:
+    stats: MemoryStats
+    wall_s: float
+    env: Dict[str, int]
+
+
+class PlanInterpreter:
+    def __init__(self, plan: ExecutionPlan, *,
+                 memory_limit: Optional[int] = None,
+                 donate_inputs: bool = False,
+                 count_inputs: bool = True):
+        self.plan = plan
+        self.g = plan.graph
+        self.memory_limit = memory_limit
+        self.donate_inputs = donate_inputs
+        self.count_inputs = count_inputs
+        self._output_ids = {v.id for v in self.g.outputs}
+        self._value_by_id = {v.id: v for v in self.g.values}
+        self._remaining_template: Dict[int, int] = {
+            v.id: len([c for c in v.consumers if c.id in plan.pos])
+            for v in self.g.values
+        }
+        # per-env caches reused across calls (training repeats shapes)
+        self._size_cache: Dict[Tuple, Dict[int, int]] = {}
+        self._params_cache: Dict[Tuple, Dict[int, Dict[str, Any]]] = {}
+
+    # ---------------------------------------------------------------- run --
+    def run(self, flat_args: Sequence[Any]) -> Tuple[List[Any], RunReport]:
+        t0 = time.perf_counter()
+        g, plan = self.g, self.plan
+        env = solve_env(g, flat_args)
+        mm = MemoryManager(self.memory_limit)
+        policy = RuntimeRematPolicy(plan, env)
+        env_key = tuple(sorted(env.items()))
+        nbytes = self._size_cache.setdefault(env_key, {})
+        refined = self._params_cache.setdefault(env_key, {})
+        if len(self._size_cache) > 64:  # bound the per-shape caches
+            self._size_cache.clear()
+            self._params_cache.clear()
+            nbytes = self._size_cache.setdefault(env_key, {})
+            refined = self._params_cache.setdefault(env_key, {})
+
+        def bytes_of(v: Value) -> int:
+            b = nbytes.get(v.id)
+            if b is None:
+                b = v.nbytes_expr.evaluate(env)
+                nbytes[v.id] = b
+            return b
+
+        def params_of(node: Node) -> Dict[str, Any]:
+            p = refined.get(node.id)
+            if p is None:
+                p = refine_params(node.params, env)
+                refined[node.id] = p
+            return p
+
+        storage: Dict[int, Any] = {}          # vid -> device array
+        host_storage: Dict[int, Any] = {}     # vid -> host (numpy) array
+        evicted_recompute: set = set()        # vids dropped, regenerable
+        remaining = dict(self._remaining_template)
+        holds: Dict[int, int] = {}            # regen source pins
+        step_holder = {"i": 0}
+        pinned_holder = {"s": frozenset()}
+
+        def is_materializable(vid: int) -> bool:
+            return vid in storage or vid in host_storage or vid in evicted_recompute
+
+        def maybe_free(vid: int) -> None:
+            if remaining.get(vid, 0) == 0 and holds.get(vid, 0) == 0 \
+                    and vid not in self._output_ids:
+                v = self._value_by_id[vid]
+                if v.is_materialized_input() and not self.donate_inputs:
+                    return
+                was_tracked = vid in storage or vid in host_storage \
+                    or vid in evicted_recompute
+                storage.pop(vid, None)
+                host_storage.pop(vid, None)
+                evicted_recompute.discard(vid)
+                if was_tracked and (self.count_inputs or not v.is_materialized_input()):
+                    mm.free(vid)
+
+        # -- eviction callback wired into the memory manager ------------------
+        def evict(need: int) -> int:
+            live = {vid: mm.device_bytes(vid) for vid in list(storage)
+                    if vid in plan.candidates
+                    and (remaining.get(vid, 0) > 0 or holds.get(vid, 0) > 0)}
+            decisions = policy.choose_victims(need, live, pinned_holder["s"],
+                                              step_holder["i"])
+            freed = 0
+            for dec in decisions:
+                arr = storage.pop(dec.vid, None)
+                if arr is None:
+                    continue
+                method = dec.method
+                if method == "recompute":
+                    rp = plan.candidates[dec.vid].recompute
+                    # recompute is only safe if every source is materializable
+                    if rp is None or not all(is_materializable(s)
+                                             for s in rp.source_ids):
+                        method = "offload"
+                if method == "offload":
+                    host_storage[dec.vid] = np.asarray(arr)
+                    mm.evict_to_host(dec.vid)
+                else:
+                    rp = plan.candidates[dec.vid].recompute
+                    for sid in rp.source_ids:
+                        holds[sid] = holds.get(sid, 0) + 1
+                    evicted_recompute.add(dec.vid)
+                    mm.evict_drop(dec.vid)
+                del arr
+                freed += dec.bytes_freed
+            return freed
+
+        mm.evict_callback = evict
+
+        # -- registration of inputs & consts ---------------------------------
+        for val, arr in zip(g.inputs, flat_args):
+            storage[val.id] = arr
+            if self.count_inputs:
+                mm.alloc(val.id, bytes_of(val))
+        for val in g.consts:
+            storage[val.id] = val.const_val
+            if self.count_inputs:
+                mm.alloc(val.id, bytes_of(val))
+
+        # -- materialize-on-demand (Remat::RegenerateOp) -----------------------
+        def materialize(v: Value) -> Any:
+            arr = storage.get(v.id)
+            if arr is not None:
+                return arr
+            if v.id in host_storage:  # reload path (H2D)
+                mm.ensure(bytes_of(v))
+                arr = jnp.asarray(host_storage.pop(v.id))
+                mm.reload(v.id)
+                storage[v.id] = arr
+                return arr
+            if v.id in evicted_recompute:  # recompute path
+                cand = plan.candidates[v.id]
+                rp = cand.recompute
+                assert rp is not None
+                evicted_recompute.discard(v.id)
+                for sid in rp.source_ids:  # recursion strictly moves up-graph
+                    materialize(self._value_by_id[sid])
+                temps: Dict[int, Any] = {}
+
+                def read_local(x: Value) -> Any:
+                    if x.id in temps:
+                        return temps[x.id]
+                    return materialize(x)
+
+                out_arr = None
+                for nid in rp.node_ids:
+                    node = plan.node_by_id[nid]
+                    ins = [read_local(iv) for iv in node.invals]
+                    outs = _bind_node(node, ins, params_of(node))
+                    for ov, oa in zip(node.outvals, outs):
+                        temps[ov.id] = oa
+                        if ov.id == v.id:
+                            out_arr = oa
+                assert out_arr is not None, "recompute plan missed its target"
+                mm.ensure(bytes_of(v))
+                mm.restore(v.id, bytes_of(v))
+                mm.stats.recompute_flops += rp.flops.evaluate(env)
+                storage[v.id] = out_arr
+                # release regen holds on sources
+                for sid in rp.source_ids:
+                    holds[sid] = holds.get(sid, 0) - 1
+                    if holds[sid] <= 0:
+                        holds.pop(sid, None)
+                        maybe_free(sid)
+                return out_arr
+            raise KeyError(f"value {v} is not materializable")
+
+        # -- main loop ----------------------------------------------------------
+        order = plan.order
+        for i, node in enumerate(order):
+            step_holder["i"] = i
+            pinned_holder["s"] = frozenset(
+                [iv.id for iv in node.invals] + [ov.id for ov in node.outvals])
+            ins = [materialize(iv) for iv in node.invals]
+            out_bytes = sum(bytes_of(ov) for ov in node.outvals
+                            if ov.consumers or ov.id in self._output_ids)
+            mm.ensure(out_bytes)  # Remat::EvictOp check
+            outs = _bind_node(node, ins, params_of(node))
+            del ins
+            for ov, oa in zip(node.outvals, outs):
+                if ov.consumers or ov.id in self._output_ids:
+                    storage[ov.id] = oa
+                    mm.alloc(ov.id, bytes_of(ov))
+            # free dead values (buffer lifetime = last consumer)
+            seen = set()
+            for iv in node.invals:
+                if iv.id in seen:
+                    continue
+                seen.add(iv.id)
+                remaining[iv.id] -= sum(1 for x in node.invals if x.id == iv.id)
+                maybe_free(iv.id)
+
+        outputs = [materialize(v) for v in g.outputs]
+        wall = time.perf_counter() - t0
+        return outputs, RunReport(stats=mm.stats, wall_s=wall, env=env)

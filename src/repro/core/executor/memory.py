@@ -1,0 +1,120 @@
+"""Device/host memory accounting with a limit and an eviction hook.
+
+On a real TPU the pools map to HBM and host DRAM (offload via
+``jax.device_put`` to a host memory space); in this CPU container the pools
+are exact byte accounting over the arrays the interpreter owns — the same
+decision inputs the paper's runtime takes from the CUDA caching allocator,
+but precise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+
+class MemoryLimitExceeded(RuntimeError):
+    pass
+
+
+@dataclass
+class MemoryStats:
+    device_used: int = 0
+    device_peak: int = 0
+    host_used: int = 0
+    host_peak: int = 0
+    evictions: int = 0
+    evicted_bytes: int = 0
+    reloads: int = 0
+    recomputes: int = 0
+    recompute_flops: int = 0
+    offloads: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+class MemoryManager:
+    """Tracks per-tensor residency; enforces a device-bytes limit.
+
+    ``ensure(nbytes)`` is the paper's ``Remat::EvictOp`` trigger: called
+    before each allocation, it invokes the eviction callback until the
+    allocation fits (or raises).
+    """
+
+    def __init__(self, limit_bytes: Optional[int] = None):
+        self.limit = limit_bytes
+        self.stats = MemoryStats()
+        self._device: Dict[int, int] = {}  # value id -> bytes
+        self._host: Dict[int, int] = {}
+        self.evict_callback: Optional[Callable[[int], int]] = None
+
+    # -- residency queries -----------------------------------------------------
+    def on_device(self, vid: int) -> bool:
+        return vid in self._device
+
+    def on_host(self, vid: int) -> bool:
+        return vid in self._host
+
+    def device_bytes(self, vid: int) -> int:
+        return self._device.get(vid, 0)
+
+    # -- allocation lifecycle ----------------------------------------------------
+    def ensure(self, nbytes: int) -> None:
+        if self.limit is None:
+            return
+        if self.stats.device_used + nbytes <= self.limit:
+            return
+        if self.evict_callback is not None:
+            need = self.stats.device_used + nbytes - self.limit
+            self.evict_callback(need)
+        if self.stats.device_used + nbytes > self.limit:
+            raise MemoryLimitExceeded(
+                f"need {nbytes} bytes; used {self.stats.device_used} of "
+                f"limit {self.limit} and eviction could not free enough")
+
+    def alloc(self, vid: int, nbytes: int) -> None:
+        assert vid not in self._device, f"double alloc of value {vid}"
+        self._device[vid] = nbytes
+        self.stats.device_used += nbytes
+        self.stats.device_peak = max(self.stats.device_peak, self.stats.device_used)
+
+    def free(self, vid: int) -> None:
+        b = self._device.pop(vid, None)
+        if b is not None:
+            self.stats.device_used -= b
+        hb = self._host.pop(vid, None)
+        if hb is not None:
+            self.stats.host_used -= hb
+
+    # -- eviction paths -------------------------------------------------------
+    def evict_to_host(self, vid: int) -> None:
+        b = self._device.pop(vid)
+        self.stats.device_used -= b
+        self._host[vid] = b
+        self.stats.host_used += b
+        self.stats.host_peak = max(self.stats.host_peak, self.stats.host_used)
+        self.stats.evictions += 1
+        self.stats.evicted_bytes += b
+        self.stats.offloads += 1
+
+    def evict_drop(self, vid: int) -> None:
+        """Eviction with recompute regeneration: bytes simply drop."""
+        b = self._device.pop(vid)
+        self.stats.device_used -= b
+        self.stats.evictions += 1
+        self.stats.evicted_bytes += b
+
+    def reload(self, vid: int) -> None:
+        b = self._host.pop(vid)
+        self.stats.host_used -= b
+        self._device[vid] = b
+        self.stats.device_used += b
+        self.stats.device_peak = max(self.stats.device_peak, self.stats.device_used)
+        self.stats.reloads += 1
+
+    def restore(self, vid: int, nbytes: int) -> None:
+        """Re-allocation after recompute regeneration."""
+        self._device[vid] = nbytes
+        self.stats.device_used += nbytes
+        self.stats.device_peak = max(self.stats.device_peak, self.stats.device_used)
+        self.stats.recomputes += 1

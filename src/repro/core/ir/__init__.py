@@ -1,0 +1,7 @@
+from .graph import Graph, Node, Value
+from .trace import graph_from_closed_jaxpr, refine_params, solve_env, trace_to_graph
+
+__all__ = [
+    "Graph", "Node", "Value",
+    "graph_from_closed_jaxpr", "refine_params", "solve_env", "trace_to_graph",
+]

@@ -1,0 +1,207 @@
+"""jaxpr -> Graph tracing (the paper's "dynamic shape computation graph").
+
+We trace the target function once with ``jax.make_jaxpr`` over
+ShapeDtypeStructs whose dynamic dims are ``jax.export.symbolic_shape``
+variables, then convert to our IR.  Call-like primitives (jit, remat,
+custom_jvp/vjp) are inlined so the analyses see a flat op graph, matching
+the paper's post-fusion HLO-level view.  Control-flow primitives
+(scan/while/cond) are kept opaque.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax import tree_util
+from jax._src import core as jcore
+
+from ..symbolic import dim_to_expr
+from ..symbolic.expr import SymbolicExpr
+from .graph import Graph, Node, Value
+
+# primitive name -> params key holding the sub-jaxpr to inline
+_INLINE_CLOSED = {"pjit": "jaxpr", "jit": "jaxpr", "closed_call": "call_jaxpr",
+                  "custom_jvp_call": "call_jaxpr", "custom_vjp_call": "call_jaxpr"}
+_INLINE_OPEN = {"remat2": "jaxpr", "checkpoint": "jaxpr", "remat": "jaxpr"}
+
+
+def _dims_of_aval(aval) -> Tuple[SymbolicExpr, ...]:
+    return tuple(dim_to_expr(d) for d in aval.shape)
+
+
+def graph_from_closed_jaxpr(closed, *, name: str = "") -> Graph:
+    g = Graph()
+    env: Dict[Any, Value] = {}
+
+    def read(var) -> Value:
+        if isinstance(var, jcore.Literal):
+            aval = var.aval
+            v = g.new_value(_dims_of_aval(aval), aval.dtype, aval.shape,
+                            kind="const", const_val=np.asarray(var.val))
+            g.consts.append(v)
+            return v
+        return env[var]
+
+    def write(var, value: Value) -> None:
+        env[var] = value
+
+    jaxpr = closed.jaxpr
+    # graph inputs
+    for i, var in enumerate(jaxpr.invars):
+        aval = var.aval
+        v = g.new_value(_dims_of_aval(aval), aval.dtype, aval.shape, kind="input",
+                        name=f"in{i}")
+        g.inputs.append(v)
+        write(var, v)
+    # top-level consts
+    for var, cval in zip(jaxpr.constvars, closed.consts):
+        aval = var.aval
+        v = g.new_value(_dims_of_aval(aval), aval.dtype, aval.shape, kind="const",
+                        const_val=cval)
+        g.consts.append(v)
+        write(var, v)
+
+    def process(jaxpr, read_local, write_local):
+        for eqn in jaxpr.eqns:
+            pname = eqn.primitive.name
+            if pname in _INLINE_CLOSED or pname in _INLINE_OPEN:
+                _inline(eqn, read_local, write_local)
+                continue
+            invals = [read_local(v) for v in eqn.invars]
+            outvals = []
+            for ov in eqn.outvars:
+                aval = ov.aval
+                val = g.new_value(_dims_of_aval(aval), aval.dtype, aval.shape)
+                outvals.append(val)
+                if not isinstance(ov, jcore.DropVar):
+                    write_local(ov, val)
+            g.add_node(eqn.primitive, invals, outvals, eqn.params)
+
+    def _inline(eqn, read_outer, write_outer):
+        pname = eqn.primitive.name
+        local_env: Dict[Any, Value] = {}
+
+        def read_inner(var):
+            if isinstance(var, jcore.Literal):
+                return read(var)
+            return local_env[var]
+
+        def write_inner(var, value):
+            local_env[var] = value
+
+        if pname in _INLINE_CLOSED:
+            sub = eqn.params[_INLINE_CLOSED[pname]]
+            inner, consts = sub.jaxpr, sub.consts
+            n_skip = eqn.params.get("num_consts", 0)
+            # custom_jvp_call passes jvp consts first in some versions; the
+            # closed call_jaxpr invars match eqn invars[n_skip:] if lengths differ
+            outer_invals = [read_outer(v) for v in eqn.invars]
+            if len(inner.invars) != len(outer_invals):
+                outer_invals = outer_invals[len(outer_invals) - len(inner.invars):]
+            for var, cval in zip(inner.constvars, consts):
+                aval = var.aval
+                cv = g.new_value(_dims_of_aval(aval), aval.dtype, aval.shape,
+                                 kind="const", const_val=cval)
+                g.consts.append(cv)
+                write_inner(var, cv)
+        else:  # open jaxpr (remat): constvars empty, invars match eqn invars
+            inner = eqn.params[_INLINE_OPEN[pname]]
+            outer_invals = [read_outer(v) for v in eqn.invars]
+            assert not inner.constvars, f"{pname} with constvars unsupported"
+        for var, val in zip(inner.invars, outer_invals):
+            write_inner(var, val)
+        process(inner, read_inner, write_inner)
+        for outer_var, inner_var in zip(eqn.outvars, inner.outvars):
+            if isinstance(outer_var, jcore.DropVar):
+                continue
+            write_outer(outer_var, read_inner(inner_var))
+
+    process(jaxpr, read, write)
+
+    for var in jaxpr.outvars:
+        g.outputs.append(read(var))
+    return g
+
+
+def trace_to_graph(fn: Callable, *args, **kwargs) -> Tuple[Graph, Any]:
+    """Trace ``fn`` over (possibly symbolic) ShapeDtypeStruct args.
+
+    Returns (graph, out_shape_pytree).  The graph's ``in_tree``/``out_tree``
+    record the pytree structure so the interpreter can offer the original
+    calling convention.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    flat_args, in_tree = tree_util.tree_flatten((args, kwargs))
+    g = graph_from_closed_jaxpr(closed)
+    g.in_tree = in_tree
+    out_shapes = jax.eval_shape(fn, *args, **kwargs)
+    _, out_tree = tree_util.tree_flatten(out_shapes)
+    g.out_tree = out_tree
+    return g, out_shapes
+
+
+# ---------------------------------------------------------------------------
+# Runtime param refinement: evaluate symbolic dims inside eqn params
+# ---------------------------------------------------------------------------
+
+
+def _contains_symbolic(x) -> bool:
+    from ..symbolic import is_symbolic_dim
+    if is_symbolic_dim(x):
+        return True
+    if isinstance(x, (tuple, list)):
+        return any(_contains_symbolic(e) for e in x)
+    if isinstance(x, dict):
+        return any(_contains_symbolic(v) for v in x.values())
+    return False
+
+
+def refine_params(params: Dict[str, Any], env: Dict[str, int]) -> Dict[str, Any]:
+    """Replace jax symbolic dims inside eqn params with concrete ints."""
+    from ..symbolic import is_symbolic_dim
+
+    def go(x):
+        if is_symbolic_dim(x):
+            return dim_to_expr(x).evaluate(env)
+        if isinstance(x, tuple):
+            rebuilt = tuple(go(e) for e in x)
+            if hasattr(x, "_fields"):  # namedtuple (e.g. GatherDimensionNumbers)
+                return type(x)(*rebuilt)
+            return rebuilt
+        if isinstance(x, list):
+            return [go(e) for e in x]
+        if isinstance(x, dict):
+            return {k: go(v) for k, v in x.items()}
+        return x
+
+    return {k: go(v) for k, v in params.items()}
+
+
+def solve_env(graph: Graph, concrete_args: Sequence[Any]) -> Dict[str, int]:
+    """Bind symbolic dim variables from the concrete shapes of flat inputs."""
+    env: Dict[str, int] = {}
+    deferred: List[Tuple[SymbolicExpr, int]] = []
+    assert len(concrete_args) == len(graph.inputs), (
+        f"expected {len(graph.inputs)} flat inputs, got {len(concrete_args)}")
+    for val, arr in zip(graph.inputs, concrete_args):
+        shape = np.shape(arr)
+        assert len(shape) == len(val.dims), f"rank mismatch for {val}: {shape}"
+        for dim_expr, concrete in zip(val.dims, shape):
+            fv = dim_expr.free_vars()
+            if not fv:
+                expected = dim_expr.evaluate({})
+                assert expected == concrete, (
+                    f"static dim mismatch: expected {expected}, got {concrete}")
+            elif len(fv) == 1 and dim_expr == SymbolicExpr.var(next(iter(fv))):
+                name = next(iter(fv))
+                if name in env:
+                    assert env[name] == concrete, (
+                        f"inconsistent binding for {name}: {env[name]} vs {concrete}")
+                env[name] = int(concrete)
+            else:
+                deferred.append((dim_expr, int(concrete)))
+    for expr, concrete in deferred:
+        got = expr.evaluate(env)
+        assert got == concrete, f"composite dim mismatch: {expr}={got} vs {concrete}"
+    return env

@@ -1,0 +1,9 @@
+from .planner import ExecutionPlan, build_plan
+from .runtime import EvictionDecision, RuntimeRematPolicy
+from .search import CandidateInfo, RecomputePlan, RecomputeSearcher, node_flops
+
+__all__ = [
+    "ExecutionPlan", "build_plan",
+    "EvictionDecision", "RuntimeRematPolicy",
+    "CandidateInfo", "RecomputePlan", "RecomputeSearcher", "node_flops",
+]

@@ -1,0 +1,70 @@
+"""Export the remat analysis to the compiled (XLA) path.
+
+The interpreter is the paper-faithful runtime; at 1000-node scale the
+train step runs under jit.  This module carries the §2.3 analysis across:
+from the symbolic recompute-subgraph search over a *single block's* graph,
+derive which jax.checkpoint policy the scanned-layer stack should use —
+i.e. how much of the block is cheap to recompute (elementwise chains)
+versus worth saving (matmul outputs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+
+from ..ir.graph import Graph
+from ..remat.planner import ExecutionPlan
+from ..remat.search import node_flops
+from ..symbolic import ShapeGraph
+
+
+@dataclass
+class RematRecommendation:
+    policy_name: str              # 'block' | 'dots_saveable' | 'none'
+    policy: Optional[Callable]    # jax.checkpoint policy (None = save all)
+    recompute_flop_fraction: float
+    recomputable_byte_fraction: float
+    rationale: str
+
+
+def recommend_policy(plan: ExecutionPlan, env: Dict[str, int],
+                     *, memory_headroom: float = 0.25) -> RematRecommendation:
+    """Pick a scan-body checkpoint policy from the §2.3 search results.
+
+    Heuristic (validated in the §Perf log): if most candidate bytes are
+    cheaply recomputable (elementwise-dominated regeneration subgraphs),
+    full block remat is nearly free — use 'block'.  If regeneration cost
+    concentrates in matmuls, saving dot outputs trades memory for ~7% FLOPs
+    — use 'dots_saveable' only when there is HBM headroom to spend.
+    """
+    g: Graph = plan.graph
+    total_flops = sum(node_flops(n).evaluate(env) for n in g.nodes) or 1
+    recomp_flops = 0
+    recomp_bytes = 0
+    total_bytes = 0
+    for cand in plan.candidates.values():
+        b = cand.value.nbytes_expr.evaluate(env)
+        total_bytes += b
+        if cand.recompute is not None:
+            recomp_bytes += b
+            recomp_flops += cand.recompute.flops.evaluate(env)
+    flop_frac = recomp_flops / total_flops
+    byte_frac = recomp_bytes / max(total_bytes, 1)
+
+    if byte_frac >= 0.5 and flop_frac <= 0.35:
+        return RematRecommendation(
+            "block", None, flop_frac, byte_frac,
+            f"{byte_frac:.0%} of candidate bytes regenerate for "
+            f"{flop_frac:.0%} of step FLOPs: full block remat is cheap")
+    if memory_headroom >= 0.3:
+        return RematRecommendation(
+            "dots_saveable",
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            flop_frac, byte_frac,
+            "regeneration is matmul-heavy and HBM headroom exists: save "
+            "dot outputs, recompute the elementwise chains")
+    return RematRecommendation(
+        "block", None, flop_frac, byte_frac,
+        "matmul-heavy regeneration but no HBM headroom: block remat")

@@ -1,0 +1,58 @@
+"""Execution-plan assembly (paper §2.3 compile-time half).
+
+Combines the scheduled order with the regeneration-plan search results into
+an ``ExecutionPlan``: conceptually the original graph with a
+``Remat::EvictOp`` after every op (realised as the interpreter's evict check
+at op boundaries) and ``Remat::RegenerateOp`` before every consumer of a
+candidate tensor (realised as the interpreter's materialize-on-demand).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from ..ir.graph import Graph, Node
+from ..scheduling.scheduler import ScheduleResult
+from ..symbolic import ShapeGraph
+from .search import CandidateInfo, RecomputeSearcher
+
+
+@dataclass
+class ExecutionPlan:
+    graph: Graph
+    order: List[Node]
+    shape_graph: ShapeGraph
+    candidates: Dict[int, CandidateInfo]          # value id -> regen info
+    node_by_id: Dict[int, Node] = field(default_factory=dict)
+    # positions for next-use estimation at runtime
+    pos: Dict[int, int] = field(default_factory=dict)
+    # value id -> sorted consumer positions
+    use_positions: Dict[int, List[int]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.node_by_id = {n.id: n for n in self.graph.nodes}
+        self.pos = {n.id: i for i, n in enumerate(self.order)}
+        for v in self.graph.values:
+            self.use_positions[v.id] = sorted(
+                self.pos[c.id] for c in v.consumers if c.id in self.pos)
+
+    @property
+    def n_candidates(self) -> int:
+        return len(self.candidates)
+
+    @property
+    def n_recomputable(self) -> int:
+        return sum(1 for c in self.candidates.values() if c.recompute is not None)
+
+
+def build_plan(graph: Graph, schedule: ScheduleResult,
+               shape_graph: Optional[ShapeGraph] = None,
+               *, enable_remat: bool = True,
+               max_subgraph: int = 24) -> ExecutionPlan:
+    sg = shape_graph if shape_graph is not None else ShapeGraph()
+    candidates: Dict[int, CandidateInfo] = {}
+    if enable_remat:
+        searcher = RecomputeSearcher(graph, sg, max_subgraph=max_subgraph)
+        candidates = searcher.explore(schedule.order)
+    return ExecutionPlan(graph=graph, order=list(schedule.order),
+                         shape_graph=sg, candidates=candidates)

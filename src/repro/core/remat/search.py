@@ -1,0 +1,145 @@
+"""Compile-time recomputation-subgraph search (paper §2.3).
+
+For each rematerialization candidate tensor, grow a recompute subgraph
+backwards from its producer, evaluating the *symbolic* memory impact of each
+candidate subgraph:
+
+    impact(S) = bytes(target) − Σ bytes(sources of S that are not always-live)
+
+Graph inputs and constants are always live, so they contribute no cost
+(this reproduces the paper's Listing-1 walkthrough: {Reduce} → −11007·S1,
+{Reduce,Dot} → −11·S1, {Reduce,Dot,Reshape} → +1·S1).  The best subgraph
+seen is kept; a candidate is *recomputable* iff its best impact is
+definitely positive under the shape graph.  Reload (offload) plans are
+always available and memory-neutral.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..ir.graph import Graph, Node, Value
+from ..symbolic import Cmp, ShapeGraph, SymbolicExpr, ZERO
+
+# rough per-primitive cost model (symbolic FLOPs) -----------------------------
+
+
+def node_flops(n: Node) -> SymbolicExpr:
+    if n.prim_name == "dot_general":
+        dnums = n.params.get("dimension_numbers")
+        lhs, rhs, out = n.invals[0], n.invals[1], n.outvals[0]
+        # flops = 2 * prod(out dims) * prod(contracting dims of lhs)
+        (lc, _rc), _ = dnums
+        k = ZERO + 1
+        for d in lc:
+            k = k * lhs.dims[d]
+        return 2 * out.size_expr * k
+    if n.prim_name in ("conv_general_dilated",):
+        return 2 * n.outvals[0].size_expr  # lower bound; convs unused in LMs here
+    # elementwise / data movement: one flop per output element
+    total = ZERO
+    for ov in n.outvals:
+        total = total + ov.size_expr
+    return total
+
+
+@dataclass
+class RecomputePlan:
+    target: Value
+    node_ids: Tuple[int, ...]            # topo-ordered subgraph (graph node ids)
+    source_ids: Tuple[int, ...]          # value ids that must be materialized
+    impact: SymbolicExpr                 # symbolic memory benefit of evicting
+    flops: SymbolicExpr                  # symbolic recompute cost
+
+
+@dataclass
+class CandidateInfo:
+    value: Value
+    recompute: Optional[RecomputePlan]   # None if no beneficial subgraph found
+    offloadable: bool = True             # reload is always available
+
+
+class RecomputeSearcher:
+    def __init__(self, graph: Graph, shape_graph: Optional[ShapeGraph] = None,
+                 *, max_subgraph: int = 24):
+        self.g = graph
+        self.sg = shape_graph if shape_graph is not None else ShapeGraph()
+        self.max_subgraph = max_subgraph
+        self._output_ids = {v.id for v in graph.outputs}
+
+    def _sources(self, nodes: Set[Node]) -> List[Value]:
+        node_ids = {n.id for n in nodes}
+        produced = {ov.id for n in nodes for ov in n.outvals}
+        srcs: Dict[int, Value] = {}
+        for n in nodes:
+            for iv in n.invals:
+                if iv.id not in produced:
+                    srcs[iv.id] = iv
+        return list(srcs.values())
+
+    def _impact(self, target: Value, nodes: Set[Node]) -> SymbolicExpr:
+        imp = target.nbytes_expr
+        for src in self._sources(nodes):
+            if src.is_materialized_input():
+                continue  # always live, no extra retention cost
+            imp = imp - src.nbytes_expr
+        return imp
+
+    def search(self, target: Value) -> Optional[RecomputePlan]:
+        """Greedy backward growth, keeping the best symbolic impact seen."""
+        if target.producer is None:
+            return None
+        sub: Set[Node] = {target.producer}
+        best_nodes = set(sub)
+        best_imp = self._impact(target, sub)
+        while len(sub) < self.max_subgraph:
+            # pick the most expensive non-always-live source to absorb
+            srcs = [s for s in self._sources(sub)
+                    if not s.is_materialized_input() and s.producer is not None]
+            if not srcs:
+                break
+            pick = srcs[0]
+            for s in srcs[1:]:
+                if self.sg.compare(s.nbytes_expr, pick.nbytes_expr) is Cmp.GT:
+                    pick = s
+            if pick.producer in sub:
+                break
+            sub.add(pick.producer)
+            imp = self._impact(target, sub)
+            if self.sg.compare(imp, best_imp) is Cmp.GT:
+                best_imp, best_nodes = imp, set(sub)
+            # early exit: impact can't improve once all sources are always-live
+        # beneficial iff impact definitely > 0
+        if self.sg.compare(best_imp, ZERO) is not Cmp.GT:
+            return None
+        order = [n for n in self.g.nodes if n in best_nodes]  # topo by construction
+        flops = ZERO
+        for n in order:
+            flops = flops + node_flops(n)
+        sources = tuple(s.id for s in self._sources(best_nodes))
+        return RecomputePlan(target, tuple(n.id for n in order), sources,
+                             best_imp, flops)
+
+    # -- full exploration (paper: "explores all rematerialization candidates") --
+    def explore(self, order: Sequence[Node]) -> Dict[int, CandidateInfo]:
+        """Search regeneration plans for every remat candidate.
+
+        Candidates are intermediate values with at least one consumer that is
+        not their producer's immediate successor (i.e. they stay live across
+        other ops) and that are not graph outputs.
+        """
+        pos = {n.id: i for i, n in enumerate(order)}
+        out: Dict[int, CandidateInfo] = {}
+        for v in self.g.values:
+            if v.kind != "intermediate" or v.id in self._output_ids:
+                continue
+            if v.producer is None or not v.consumers:
+                continue
+            p = pos.get(v.producer.id)
+            if p is None:
+                continue
+            last_use = max(pos[c.id] for c in v.consumers if c.id in pos)
+            if last_use <= p + 1:
+                continue  # never idle: evicting it can't help
+            out[v.id] = CandidateInfo(value=v, recompute=self.search(v))
+        return out

@@ -1,0 +1,4 @@
+from .memsim import MemTimeline, simulate_peak
+from .scheduler import OpScheduler, ScheduleResult, schedule_graph
+
+__all__ = ["MemTimeline", "simulate_peak", "OpScheduler", "ScheduleResult", "schedule_graph"]

@@ -1,0 +1,169 @@
+"""Operation scheduling based on symbolic shapes (paper §2.2).
+
+List scheduling: repeatedly pick from the ReadySet the op with the most
+favourable *memory impact*, where
+
+    impact(op) = Σ bytes(outputs) − Σ bytes(inputs this op frees)
+
+expressed as a ``SymbolicExpr`` and compared through the symbolic shape
+graph.  When two impacts are incomparable we fall back to the paper's
+lifetime-based topology heuristic.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..ir.graph import Graph, Node, Value
+from ..symbolic import Cmp, ShapeGraph, SymbolicExpr, ZERO
+
+
+@dataclass
+class ScheduleResult:
+    order: List[Node]
+    # how many ReadySet decisions were resolved symbolically vs by tie-break
+    symbolic_decisions: int
+    tiebreak_decisions: int
+
+    @property
+    def decision_symbolic_fraction(self) -> float:
+        total = self.symbolic_decisions + self.tiebreak_decisions
+        return self.symbolic_decisions / total if total else 1.0
+
+
+class OpScheduler:
+    """Paper §2.2 ``OpScheduler`` main loop."""
+
+    def __init__(self, graph: Graph, shape_graph: Optional[ShapeGraph] = None,
+                 *, count_input_frees: bool = False):
+        self.g = graph
+        self.sg = shape_graph if shape_graph is not None else ShapeGraph()
+        self.count_input_frees = count_input_frees
+        self._cmp_cache: Dict[Tuple[SymbolicExpr, SymbolicExpr], Cmp] = {}
+        self._output_ids = {v.id for v in graph.outputs}
+
+    # -- symbolic comparison with memoization ---------------------------------
+    def _compare(self, a: SymbolicExpr, b: SymbolicExpr) -> Cmp:
+        key = (a, b)
+        hit = self._cmp_cache.get(key)
+        if hit is None:
+            hit = self.sg.compare(a, b)
+            self._cmp_cache[key] = hit
+        return hit
+
+    # -- memory impact ----------------------------------------------------------
+    def _impact(self, n: Node, remaining: Dict[int, int]) -> SymbolicExpr:
+        imp = ZERO
+        for ov in n.outvals:
+            if ov.consumers or ov.id in self._output_ids:
+                imp = imp + ov.nbytes_expr
+        freed: Set[int] = set()
+        for iv in n.invals:
+            if iv.id in freed:
+                continue
+            if not self.count_input_frees and iv.is_materialized_input():
+                continue
+            if iv.id in self._output_ids:
+                continue
+            # does scheduling n free iv?  (n is its only remaining consumer —
+            # count multiplicity: n may consume iv several times)
+            mult = sum(1 for x in n.invals if x.id == iv.id)
+            if remaining[iv.id] == mult:
+                imp = imp - iv.nbytes_expr
+                freed.add(iv.id)
+        return imp
+
+    # -- tie-break: smaller overall tensor lifetimes (paper fallback) ----------
+    def _tiebreak_key(self, n: Node, orig_pos: Dict[int, int],
+                      remaining: Dict[int, int]) -> Tuple:
+        frees = 0
+        seen_ids = set()
+        for iv in n.invals:
+            if iv.id in seen_ids:
+                continue
+            seen_ids.add(iv.id)
+            mult = sum(1 for x in n.invals if x.id == iv.id)
+            if remaining.get(iv.id, 0) == mult and not iv.is_materialized_input():
+                frees += 1
+        # prefer ops that free tensors, then ops whose results are consumed
+        # soon (small distance to first consumer in original order), then
+        # original program order for stability.
+        next_use = min(
+            (orig_pos[c.id] for ov in n.outvals for c in ov.consumers),
+            default=orig_pos[n.id],
+        )
+        return (-frees, next_use, orig_pos[n.id])
+
+    # -- main loop ----------------------------------------------------------------
+    def schedule(self) -> ScheduleResult:
+        g = self.g
+        orig_pos = {n.id: i for i, n in enumerate(g.nodes)}
+        # dependency counts
+        deps: Dict[int, int] = {}
+        for n in g.nodes:
+            cnt = 0
+            seen = set()
+            for iv in n.invals:
+                p = iv.producer
+                if p is not None and p.id not in seen:
+                    seen.add(p.id)
+                    cnt += 1
+            deps[n.id] = cnt
+        consumers_of: Dict[int, List[Node]] = {}
+        remaining: Dict[int, int] = {}
+        for v in g.values:
+            remaining[v.id] = len(v.consumers)
+        ready: List[Node] = sorted(
+            (n for n in g.nodes if deps[n.id] == 0), key=lambda n: orig_pos[n.id])
+        order: List[Node] = []
+        sym_dec = tie_dec = 0
+        node_by_id = {n.id: n for n in g.nodes}
+        # children map: node -> nodes depending on it
+        children: Dict[int, List[Node]] = {n.id: [] for n in g.nodes}
+        for n in g.nodes:
+            seen = set()
+            for iv in n.invals:
+                p = iv.producer
+                if p is not None and p.id not in seen:
+                    seen.add(p.id)
+                    children[p.id].append(n)
+
+        while ready:
+            # pick best by symbolic impact, tie-break by lifetime heuristic
+            best = ready[0]
+            best_imp = self._impact(best, remaining)
+            for cand in ready[1:]:
+                ci = self._impact(cand, remaining)
+                c = self._compare(ci, best_imp)
+                if c is Cmp.LT:
+                    best, best_imp = cand, ci
+                    sym_dec += 1
+                elif c is Cmp.GT:
+                    sym_dec += 1
+                else:  # EQ / LE / GE / UNKNOWN -> lifetime tie-break
+                    tie_dec += 1
+                    if self._tiebreak_key(cand, orig_pos, remaining) < \
+                       self._tiebreak_key(best, orig_pos, remaining):
+                        best, best_imp = cand, ci
+            ready.remove(best)
+            order.append(best)
+            # update refcounts
+            for iv in best.invals:
+                remaining[iv.id] -= 1
+            for ov in best.outvals:
+                remaining[ov.id] = len(ov.consumers)
+            # new ready nodes
+            for ch in children[best.id]:
+                deps[ch.id] -= 1
+                if deps[ch.id] == 0:
+                    ready.append(ch)
+            ready.sort(key=lambda n: orig_pos[n.id])
+
+        g.validate_order(order)
+        return ScheduleResult(order, sym_dec, tie_dec)
+
+
+def schedule_graph(graph: Graph, shape_graph: Optional[ShapeGraph] = None,
+                   **kw) -> ScheduleResult:
+    return OpScheduler(graph, shape_graph, **kw).schedule()

@@ -1,0 +1,9 @@
+from .expr import Atom, OpAtom, SymbolicExpr, ZERO, ONE, size_of
+from .shape_graph import Cmp, ShapeGraph
+from .from_jax import dim_to_expr, is_symbolic_dim, refine_dim, shape_to_exprs
+
+__all__ = [
+    "Atom", "OpAtom", "SymbolicExpr", "ZERO", "ONE", "size_of",
+    "Cmp", "ShapeGraph",
+    "dim_to_expr", "is_symbolic_dim", "refine_dim", "shape_to_exprs",
+]

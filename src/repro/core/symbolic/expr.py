@@ -1,0 +1,395 @@
+"""SymbolicExpr: the algebraic representation of symbolic shape dimensions.
+
+This is the paper's ``SymbolicExpr`` (§2.1): a canonical multivariate
+polynomial over *atoms*.  An atom is either a plain symbolic dimension
+(``@S0`` in the paper, a free variable such as a batch or sequence length)
+or an *opaque* compound (floordiv / mod / max / min over sub-expressions)
+which participates in the polynomial as an indivisible variable but can
+still be evaluated numerically and bounded.
+
+Representation: ``terms`` maps a *monomial* — a sorted tuple of
+``(atom, exponent)`` pairs — to an integer coefficient.  The empty monomial
+is the constant term.  This canonical form makes equality, addition and
+multiplication exact, which is what the paper's comparisons build on.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, Mapping, Optional, Tuple, Union
+
+# ---------------------------------------------------------------------------
+# Atoms
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Atom:
+    """A symbolic dimension variable (paper's ``SymbolicDim``)."""
+
+    name: str
+
+    def evaluate(self, env: Mapping[str, int]) -> int:
+        try:
+            return int(env[self.name])
+        except KeyError:
+            raise KeyError(f"unbound symbolic dim {self.name!r}") from None
+
+    def free_vars(self) -> frozenset:
+        return frozenset({self.name})
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return self.name
+
+
+@dataclass(frozen=True)
+class OpAtom:
+    """An opaque compound atom: floordiv/mod/max/min over SymbolicExprs.
+
+    These arise from shape arithmetic that is not polynomial.  They are
+    treated as indivisible variables by the polynomial algebra, remain
+    evaluable, and expose conservative bounds.
+    """
+
+    op: str  # 'floordiv' | 'mod' | 'max' | 'min'
+    operands: Tuple["SymbolicExpr", ...]
+
+    def evaluate(self, env: Mapping[str, int]) -> int:
+        vals = [x.evaluate(env) for x in self.operands]
+        if self.op == "floordiv":
+            return vals[0] // vals[1]
+        if self.op == "mod":
+            return vals[0] % vals[1]
+        if self.op == "max":
+            return max(vals)
+        if self.op == "min":
+            return min(vals)
+        raise ValueError(f"unknown op atom {self.op}")
+
+    def free_vars(self) -> frozenset:
+        out: frozenset = frozenset()
+        for x in self.operands:
+            out |= x.free_vars()
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{self.op}({', '.join(map(repr, self.operands))})"
+
+
+AtomT = Union[Atom, OpAtom]
+Monomial = Tuple[Tuple[AtomT, int], ...]  # sorted by atom repr
+_EMPTY: Monomial = ()
+
+
+def _mono_key(item: Tuple[AtomT, int]) -> str:
+    return repr(item[0])
+
+
+def _mono_mul(a: Monomial, b: Monomial) -> Monomial:
+    powers: Dict[AtomT, int] = {}
+    for atom, exp in itertools.chain(a, b):
+        powers[atom] = powers.get(atom, 0) + exp
+    items = [(atom, exp) for atom, exp in powers.items() if exp != 0]
+    items.sort(key=_mono_key)
+    return tuple(items)
+
+
+# ---------------------------------------------------------------------------
+# SymbolicExpr
+# ---------------------------------------------------------------------------
+
+
+class SymbolicExpr:
+    """Canonical integer polynomial over atoms.  Immutable."""
+
+    __slots__ = ("terms", "_hash")
+
+    def __init__(self, terms: Mapping[Monomial, int]):
+        clean = {m: c for m, c in terms.items() if c != 0}
+        object.__setattr__(self, "terms", tuple(sorted(clean.items(), key=lambda kv: tuple(map(_mono_key, kv[0])))))
+        object.__setattr__(self, "_hash", None)
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def constant(c: int) -> "SymbolicExpr":
+        return SymbolicExpr({_EMPTY: int(c)})
+
+    @staticmethod
+    def var(name: str) -> "SymbolicExpr":
+        return SymbolicExpr({((Atom(name), 1),): 1})
+
+    @staticmethod
+    def from_atom(atom: AtomT) -> "SymbolicExpr":
+        return SymbolicExpr({((atom, 1),): 1})
+
+    @staticmethod
+    def wrap(x: "ExprLike") -> "SymbolicExpr":
+        if isinstance(x, SymbolicExpr):
+            return x
+        if isinstance(x, (int,)):
+            return SymbolicExpr.constant(x)
+        raise TypeError(f"cannot wrap {type(x)} as SymbolicExpr")
+
+    # -- inspection ----------------------------------------------------------
+    def as_dict(self) -> Dict[Monomial, int]:
+        return dict(self.terms)
+
+    def is_constant(self) -> bool:
+        return all(m == _EMPTY for m, _ in self.terms)
+
+    def constant_value(self) -> Optional[int]:
+        if not self.terms:
+            return 0
+        if self.is_constant():
+            return self.terms[0][1]
+        return None
+
+    def free_vars(self) -> frozenset:
+        out: frozenset = frozenset()
+        for mono, _ in self.terms:
+            for atom, _exp in mono:
+                out |= atom.free_vars()
+        return out
+
+    def atoms(self) -> frozenset:
+        out = set()
+        for mono, _ in self.terms:
+            for atom, _exp in mono:
+                out.add(atom)
+        return frozenset(out)
+
+    # -- algebra -------------------------------------------------------------
+    def __add__(self, other: "ExprLike") -> "SymbolicExpr":
+        other = SymbolicExpr.wrap(other)
+        acc = dict(self.terms)
+        for m, c in other.terms:
+            acc[m] = acc.get(m, 0) + c
+        return SymbolicExpr(acc)
+
+    __radd__ = __add__
+
+    def __neg__(self) -> "SymbolicExpr":
+        return SymbolicExpr({m: -c for m, c in self.terms})
+
+    def __sub__(self, other: "ExprLike") -> "SymbolicExpr":
+        return self + (-SymbolicExpr.wrap(other))
+
+    def __rsub__(self, other: "ExprLike") -> "SymbolicExpr":
+        return SymbolicExpr.wrap(other) + (-self)
+
+    def __mul__(self, other: "ExprLike") -> "SymbolicExpr":
+        other = SymbolicExpr.wrap(other)
+        acc: Dict[Monomial, int] = {}
+        for m1, c1 in self.terms:
+            for m2, c2 in other.terms:
+                m = _mono_mul(m1, m2)
+                acc[m] = acc.get(m, 0) + c1 * c2
+        return SymbolicExpr(acc)
+
+    __rmul__ = __mul__
+
+    def floordiv(self, other: "ExprLike") -> "SymbolicExpr":
+        other = SymbolicExpr.wrap(other)
+        oc = other.constant_value()
+        if oc is not None and oc != 0:
+            # exact division of every coefficient -> stay polynomial
+            if all(c % oc == 0 for _, c in self.terms):
+                return SymbolicExpr({m: c // oc for m, c in self.terms})
+        sc = self.constant_value()
+        if sc is not None and oc is not None and oc != 0:
+            return SymbolicExpr.constant(sc // oc)
+        return SymbolicExpr.from_atom(OpAtom("floordiv", (self, other)))
+
+    def mod(self, other: "ExprLike") -> "SymbolicExpr":
+        other = SymbolicExpr.wrap(other)
+        sc, oc = self.constant_value(), other.constant_value()
+        if sc is not None and oc is not None and oc != 0:
+            return SymbolicExpr.constant(sc % oc)
+        if oc is not None and oc != 0 and all(c % oc == 0 for _, c in self.terms):
+            return SymbolicExpr.constant(0)
+        return SymbolicExpr.from_atom(OpAtom("mod", (self, other)))
+
+    @staticmethod
+    def max_of(a: "ExprLike", b: "ExprLike") -> "SymbolicExpr":
+        a, b = SymbolicExpr.wrap(a), SymbolicExpr.wrap(b)
+        if a == b:
+            return a
+        ca, cb = a.constant_value(), b.constant_value()
+        if ca is not None and cb is not None:
+            return SymbolicExpr.constant(max(ca, cb))
+        return SymbolicExpr.from_atom(OpAtom("max", (a, b)))
+
+    @staticmethod
+    def min_of(a: "ExprLike", b: "ExprLike") -> "SymbolicExpr":
+        a, b = SymbolicExpr.wrap(a), SymbolicExpr.wrap(b)
+        if a == b:
+            return a
+        ca, cb = a.constant_value(), b.constant_value()
+        if ca is not None and cb is not None:
+            return SymbolicExpr.constant(min(ca, cb))
+        return SymbolicExpr.from_atom(OpAtom("min", (a, b)))
+
+    # -- evaluation / substitution -------------------------------------------
+    def evaluate(self, env: Mapping[str, int]) -> int:
+        total = 0
+        for mono, coeff in self.terms:
+            v = coeff
+            for atom, exp in mono:
+                v *= atom.evaluate(env) ** exp
+            total += v
+        return total
+
+    def substitute(self, mapping: Mapping[AtomT, "SymbolicExpr"]) -> "SymbolicExpr":
+        """Replace atoms by expressions (used by the shape graph's rewriting)."""
+        out = SymbolicExpr.constant(0)
+        for mono, coeff in self.terms:
+            term = SymbolicExpr.constant(coeff)
+            for atom, exp in mono:
+                rep = mapping.get(atom)
+                if rep is None:
+                    # rebuild OpAtoms whose operands may contain replaced atoms
+                    if isinstance(atom, OpAtom):
+                        new_ops = tuple(o.substitute(mapping) for o in atom.operands)
+                        if new_ops != atom.operands:
+                            base = _rebuild_op_atom(atom.op, new_ops)
+                        else:
+                            base = SymbolicExpr.from_atom(atom)
+                    else:
+                        base = SymbolicExpr.from_atom(atom)
+                else:
+                    base = rep
+                for _ in range(exp):
+                    term = term * base
+            out = out + term
+        return out
+
+    # -- bounds ----------------------------------------------------------------
+    def bounds(
+        self,
+        lo_env: Callable[[AtomT], Optional[int]],
+        hi_env: Callable[[AtomT], Optional[int]],
+    ) -> Tuple[Optional[int], Optional[int]]:
+        """Interval bound of the polynomial given per-atom bounds.
+
+        Atoms are assumed nonnegative (tensor dims), so a monomial with
+        positive coefficient is minimized at atom lower bounds and maximized
+        at upper bounds (and vice versa for negative coefficients).  Returns
+        (lo, hi); ``None`` means unbounded in that direction.
+        """
+        total_lo: Optional[int] = 0
+        total_hi: Optional[int] = 0
+        for mono, coeff in self.terms:
+            if not mono:  # constant
+                if total_lo is not None:
+                    total_lo += coeff
+                if total_hi is not None:
+                    total_hi += coeff
+                continue
+            mono_lo, mono_hi = 1, 1  # product of atom bounds
+            for atom, exp in mono:
+                alo, ahi = _atom_bounds(atom, lo_env, hi_env)
+                mono_lo = None if (mono_lo is None or alo is None) else mono_lo * (alo ** exp)
+                mono_hi = None if (mono_hi is None or ahi is None) else mono_hi * (ahi ** exp)
+            if coeff > 0:
+                t_lo = None if mono_lo is None else coeff * mono_lo
+                t_hi = None if mono_hi is None else coeff * mono_hi
+            else:
+                t_lo = None if mono_hi is None else coeff * mono_hi
+                t_hi = None if mono_lo is None else coeff * mono_lo
+            total_lo = None if (total_lo is None or t_lo is None) else total_lo + t_lo
+            total_hi = None if (total_hi is None or t_hi is None) else total_hi + t_hi
+        return total_lo, total_hi
+
+    # -- dunder -----------------------------------------------------------------
+    def __eq__(self, other: object) -> bool:
+        if isinstance(other, int):
+            return self.terms == SymbolicExpr.constant(other).terms
+        if not isinstance(other, SymbolicExpr):
+            return NotImplemented
+        return self.terms == other.terms
+
+    def __hash__(self) -> int:
+        h = object.__getattribute__(self, "_hash")
+        if h is None:
+            h = hash(self.terms)
+            object.__setattr__(self, "_hash", h)
+        return h
+
+    def __repr__(self) -> str:
+        if not self.terms:
+            return "0"
+        parts = []
+        for mono, coeff in self.terms:
+            if not mono:
+                parts.append(str(coeff))
+                continue
+            factors = "*".join(
+                (repr(a) if e == 1 else f"{a!r}^{e}") for a, e in mono
+            )
+            if coeff == 1:
+                parts.append(factors)
+            elif coeff == -1:
+                parts.append(f"-{factors}")
+            else:
+                parts.append(f"{coeff}*{factors}")
+        return " + ".join(parts).replace("+ -", "- ")
+
+
+def _rebuild_op_atom(op: str, operands: Tuple[SymbolicExpr, ...]) -> SymbolicExpr:
+    if op == "floordiv":
+        return operands[0].floordiv(operands[1])
+    if op == "mod":
+        return operands[0].mod(operands[1])
+    if op == "max":
+        return SymbolicExpr.max_of(*operands)
+    if op == "min":
+        return SymbolicExpr.min_of(*operands)
+    raise ValueError(op)
+
+
+def _atom_bounds(
+    atom: AtomT,
+    lo_env: Callable[[AtomT], Optional[int]],
+    hi_env: Callable[[AtomT], Optional[int]],
+) -> Tuple[Optional[int], Optional[int]]:
+    lo, hi = lo_env(atom), hi_env(atom)
+    if isinstance(atom, OpAtom) and (lo is None or hi is None):
+        # derive conservative bounds from operand bounds
+        ob = [o.bounds(lambda a: lo_env(a), lambda a: hi_env(a)) for o in atom.operands]
+        if atom.op == "floordiv":
+            (nlo, nhi), (dlo, dhi) = ob
+            d_lo = 0 if (nlo is None or dhi is None or dhi <= 0) else nlo // dhi
+            d_hi = None if (nhi is None or dlo is None or dlo <= 0) else nhi // dlo
+            lo = d_lo if lo is None else lo
+            hi = d_hi if hi is None else hi
+        elif atom.op == "mod":
+            _, (dlo, dhi) = ob
+            lo = 0 if lo is None else lo
+            hi = (dhi - 1 if dhi is not None else None) if hi is None else hi
+        elif atom.op == "max":
+            los = [b[0] for b in ob]
+            his = [b[1] for b in ob]
+            lo = (max(x for x in los if x is not None) if any(x is not None for x in los) else None) if lo is None else lo
+            hi = (None if any(x is None for x in his) else max(his)) if hi is None else hi
+        elif atom.op == "min":
+            los = [b[0] for b in ob]
+            his = [b[1] for b in ob]
+            lo = (None if any(x is None for x in los) else min(los)) if lo is None else lo
+            hi = (min(x for x in his if x is not None) if any(x is not None for x in his) else None) if hi is None else hi
+    if lo is None:
+        lo = 0  # tensor dims are nonnegative
+    return lo, hi
+
+
+ExprLike = Union[int, SymbolicExpr]
+
+ZERO = SymbolicExpr.constant(0)
+ONE = SymbolicExpr.constant(1)
+
+
+def size_of(shape: Iterable[ExprLike]) -> SymbolicExpr:
+    """Element count of a shape whose dims are ints or SymbolicExprs."""
+    out = ONE
+    for d in shape:
+        out = out * SymbolicExpr.wrap(d)
+    return out

@@ -1,0 +1,76 @@
+"""Conversion between JAX shape-polymorphism dims and our SymbolicExpr.
+
+JAX's ``jax.export.symbolic_shape`` dims are ``_DimExpr`` polynomials whose
+terms/factors we walk structurally (``_sorted_terms`` → ``(_DimTerm, coeff)``;
+``_DimTerm._factors`` → ``(_DimFactor, exp)``; a factor is either a plain
+variable or an operation (floordiv/mod/max/min) over sub-_DimExprs).
+
+This module is the bridge between the tracing frontend (jaxprs with
+polymorphic avals) and the paper's symbolic machinery.  If JAX internals
+shift, ``dim_to_expr`` falls back to parsing nothing — it raises, and the
+caller treats the dim as a fresh opaque symbol, which is sound (it only
+reduces comparability, never correctness).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Tuple
+
+from .expr import Atom, OpAtom, SymbolicExpr
+
+try:  # JAX >= 0.4.30 layout
+    from jax._src.export import shape_poly as _sp
+
+    _DimExpr = _sp._DimExpr
+except Exception:  # pragma: no cover - environment without jax.export internals
+    _DimExpr = ()
+
+
+def is_symbolic_dim(d: Any) -> bool:
+    return isinstance(d, _DimExpr) if _DimExpr else False
+
+
+def dim_to_expr(d: Any) -> SymbolicExpr:
+    """Convert an int or jax _DimExpr into a SymbolicExpr."""
+    if isinstance(d, (int,)):
+        return SymbolicExpr.constant(d)
+    if not is_symbolic_dim(d):
+        raise TypeError(f"not a dimension: {type(d)}")
+    out = SymbolicExpr.constant(0)
+    for term, coeff in d._sorted_terms:
+        t = SymbolicExpr.constant(int(coeff))
+        for factor, exp in term._factors:
+            base = _factor_to_expr(factor)
+            for _ in range(int(exp)):
+                t = t * base
+        out = out + t
+    return out
+
+
+def _factor_to_expr(factor: Any) -> SymbolicExpr:
+    if factor.var is not None:
+        return SymbolicExpr.var(str(factor.var))
+    op = str(factor.operation)
+    operands = tuple(dim_to_expr(o) if is_symbolic_dim(o) else SymbolicExpr.constant(int(o))
+                     for o in factor.operands)
+    if op == "floordiv":
+        return operands[0].floordiv(operands[1])
+    if op == "mod":
+        return operands[0].mod(operands[1])
+    if op == "max":
+        return SymbolicExpr.max_of(*operands)
+    if op == "min":
+        return SymbolicExpr.min_of(*operands)
+    # Unknown operation: opaque but evaluable only via jax itself -> treat as
+    # a fresh named atom keyed by its repr (sound, loses comparability).
+    return SymbolicExpr.var(f"opaque<{factor}>")
+
+
+def shape_to_exprs(shape: Tuple[Any, ...]) -> Tuple[SymbolicExpr, ...]:
+    return tuple(dim_to_expr(d) for d in shape)
+
+
+def refine_dim(d: Any, env: Mapping[str, int]) -> int:
+    """Evaluate a (possibly symbolic) dim to a concrete int given an env."""
+    if isinstance(d, int):
+        return d
+    return dim_to_expr(d).evaluate(env)

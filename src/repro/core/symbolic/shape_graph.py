@@ -1,0 +1,128 @@
+"""The global symbolic shape graph (paper §2.1).
+
+Collects algebraic relationships between symbolic dimensions — e.g.
+``@S0 = 12 * @S1`` derived from a ``DynamicReshapeOp`` — and uses them to
+*canonicalize* ``SymbolicExpr``s so that expressions written over different
+symbol sets become comparable.  Comparison is best-effort (the paper's
+wording): decide by the sign of the canonicalized difference polynomial,
+using per-symbol lower/upper bounds when the sign is not uniform.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Dict, Mapping, Optional, Tuple
+
+from .expr import Atom, AtomT, ExprLike, OpAtom, SymbolicExpr
+
+
+class Cmp(enum.Enum):
+    LT = "LT"
+    LE = "LE"
+    EQ = "EQ"
+    GE = "GE"
+    GT = "GT"
+    UNKNOWN = "UNKNOWN"
+
+
+class ShapeGraph:
+    """Equalities between symbolic dims + bound info, with rewriting.
+
+    ``add_equality(sym, expr)`` records ``sym == expr`` (the paper's
+    ``@S0 = Mul @C12, @S1``).  Internally we keep a substitution map toward
+    "root" symbols and apply it to fixpoint during canonicalization.
+    """
+
+    def __init__(self) -> None:
+        self._subst: Dict[AtomT, SymbolicExpr] = {}
+        self._lo: Dict[AtomT, int] = {}
+        self._hi: Dict[AtomT, int] = {}
+        self.default_lo = 1  # dynamic dims come from data; assume >= 1
+
+    # -- building -------------------------------------------------------------
+    def add_equality(self, sym: "AtomT | str", expr: ExprLike) -> None:
+        if isinstance(sym, str):
+            sym = Atom(sym)
+        expr = SymbolicExpr.wrap(expr)
+        # avoid trivial/cyclic rules
+        if expr.atoms() == frozenset({sym}):
+            return
+        if sym in self._subst and self._subst[sym] == expr:
+            return
+        # normalize the rhs through existing rules before storing
+        expr = self._apply(expr)
+        if SymbolicExpr.from_atom(sym) == expr:
+            return
+        self._subst[sym] = expr
+        # re-normalize existing rules so chains collapse eagerly
+        for k in list(self._subst):
+            if k != sym:
+                self._subst[k] = self._apply(self._subst[k])
+
+    def set_bounds(self, sym: "AtomT | str", lo: Optional[int] = None, hi: Optional[int] = None) -> None:
+        if isinstance(sym, str):
+            sym = Atom(sym)
+        if lo is not None:
+            self._lo[sym] = int(lo)
+        if hi is not None:
+            self._hi[sym] = int(hi)
+
+    # -- canonicalization -------------------------------------------------------
+    def _apply(self, e: SymbolicExpr, max_iter: int = 16) -> SymbolicExpr:
+        if not self._subst:
+            return e
+        for _ in range(max_iter):
+            new = e.substitute(self._subst)
+            if new == e:
+                return e
+            e = new
+        return e
+
+    def canonicalize(self, e: ExprLike) -> SymbolicExpr:
+        return self._apply(SymbolicExpr.wrap(e))
+
+    # -- comparison ---------------------------------------------------------------
+    def _lo_env(self, a: AtomT) -> Optional[int]:
+        return self._lo.get(a, self.default_lo if isinstance(a, Atom) else None)
+
+    def _hi_env(self, a: AtomT) -> Optional[int]:
+        return self._hi.get(a)
+
+    def compare(self, e1: ExprLike, e2: ExprLike) -> Cmp:
+        """Best-effort comparison of two SymbolicExprs (paper §2.1/2.2)."""
+        d = self.canonicalize(SymbolicExpr.wrap(e1) - SymbolicExpr.wrap(e2))
+        c = d.constant_value()
+        if c is not None:
+            if c == 0:
+                return Cmp.EQ
+            return Cmp.GT if c > 0 else Cmp.LT
+        lo, hi = d.bounds(self._lo_env, self._hi_env)
+        if lo is not None and lo > 0:
+            return Cmp.GT
+        if lo is not None and lo >= 0:
+            return Cmp.GE
+        if hi is not None and hi < 0:
+            return Cmp.LT
+        if hi is not None and hi <= 0:
+            return Cmp.LE
+        return Cmp.UNKNOWN
+
+    def definitely_le(self, e1: ExprLike, e2: ExprLike) -> bool:
+        return self.compare(e1, e2) in (Cmp.LT, Cmp.LE, Cmp.EQ)
+
+    def definitely_lt(self, e1: ExprLike, e2: ExprLike) -> bool:
+        return self.compare(e1, e2) is Cmp.LT
+
+    def definitely_nonpositive(self, e: ExprLike) -> bool:
+        return self.compare(e, 0) in (Cmp.LT, Cmp.LE, Cmp.EQ)
+
+    def definitely_negative(self, e: ExprLike) -> bool:
+        return self.compare(e, 0) is Cmp.LT
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def equalities(self) -> Mapping[AtomT, SymbolicExpr]:
+        return dict(self._subst)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        rules = ", ".join(f"{k!r}={v!r}" for k, v in self._subst.items())
+        return f"ShapeGraph({rules})"

@@ -1,0 +1,3 @@
+from .pipeline import DataPipeline, PipelineConfig
+
+__all__ = ["DataPipeline", "PipelineConfig"]

@@ -1,0 +1,6 @@
+from .compression import (CompressionState, compress_gradients,
+                          init_compression_state)
+from .straggler import StragglerConfig, StragglerMonitor
+
+__all__ = ["CompressionState", "compress_gradients", "init_compression_state",
+           "StragglerConfig", "StragglerMonitor"]

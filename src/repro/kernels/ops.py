@@ -1,0 +1,41 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU runtime call these with ``interpret=False`` (the default
+resolves from the backend); this CPU container validates with
+``interpret=True`` which executes the kernel body in Python.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import rmsnorm as _rn
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "softmax_scale", "block_q",
+                                   "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    softmax_scale: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: Optional[bool] = None):
+    """q: (B, Hq, S, hd); k/v: (B, Hkv, T, hd)."""
+    interp = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               softmax_scale=softmax_scale, block_q=block_q,
+                               block_kv=block_kv, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: Optional[bool] = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=interp)

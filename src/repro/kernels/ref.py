@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        softmax_scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Hq, S, hd); k/v: (B, Hkv, T, hd).  Dense softmax attention."""
+    b, hq, s, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, hkv, g, s, hd).astype(jnp.float32) * scale
+    sc = jnp.einsum("bhgsd,bhtd->bhgst", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, s, hd).astype(q.dtype)
+
+
+def reference_rmsnorm(x: jax.Array, scale: jax.Array,
+                      eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)

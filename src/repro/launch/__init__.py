@@ -1,0 +1,7 @@
+from .mesh import dp_axes, make_debug_mesh, make_production_mesh
+from .sharding import ShardingRules
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["dp_axes", "make_debug_mesh", "make_production_mesh",
+           "ShardingRules", "make_prefill_step", "make_serve_step",
+           "make_train_step"]

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this produces the compiled artifact's memory analysis, cost
+analysis (FLOPs / bytes), and the collective-bytes tally parsed from the
+optimized HLO — the inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS, cells_for, get_config
+from ..configs.base import SHAPES
+from .mesh import make_production_mesh
+from .sharding import ShardingRules
+from .specs import input_specs
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes of every collective op in the optimized HLO."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s.startswith("%") and " = " not in s:
+            continue
+        m = re.match(r"%?[\w.\-]+ = (.*?) (all-gather|all-reduce|reduce-scatter|"
+                     r"all-to-all|collective-permute)(-start|-done)?\(", s)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             compile_cell: bool = True, grad_accum: int = 8) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+    }
+    skip = dict(cells_for(cfg))[shape_name].get("skip")
+    if skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = skip
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh)
+    kind, specs = input_specs(cfg, shape_name)
+
+    def shard(tree, spec_fn):
+        pspecs = spec_fn(tree)
+        shardings = rules.named(pspecs)
+        return jax.tree.map(
+            lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+            tree, shardings)
+
+    rec["grad_accum"] = grad_accum if kind == "train" else None
+    with mesh:
+        if kind == "train":
+            fn = make_train_step(cfg, grad_accum=grad_accum)
+            args = (shard(specs["params"], rules.params_pspecs),
+                    shard(specs["opt_state"], rules.params_pspecs),
+                    shard(specs["batch"], rules.batch_specs))
+            jfn = jax.jit(fn, donate_argnums=(0, 1))
+        elif kind == "prefill":
+            fn = make_prefill_step(cfg)
+            args = (shard(specs["params"], rules.params_pspecs),
+                    shard(specs["batch"], rules.batch_specs))
+            jfn = jax.jit(fn)
+        else:
+            fn = make_serve_step(cfg)
+            args = (shard(specs["params"], rules.params_pspecs),
+                    shard(specs["state"], rules.cache_specs),
+                    shard(specs["inp"], rules.batch_specs))
+            jfn = jax.jit(fn, donate_argnums=(1,))
+
+        lowered = jfn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        if not compile_cell:
+            rec["status"] = "lowered"
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        try:
+            rec["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+            }
+            # per-device total (arguments are sharded already)
+            rec["memory"]["total_per_device_bytes"] = (
+                rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+                + rec["memory"]["output_bytes"])
+        except AttributeError:
+            rec["memory"] = {"repr": str(mem)}
+
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float)) and (
+                               "flops" in k or "bytes" in k or k == "utilization")}
+            rec["flops"] = float(ca.get("flops", 0.0))
+            rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        except Exception as e:  # cost analysis missing on some backends
+            rec["cost_error"] = str(e)
+
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)  # unscaled (per HLO body)
+        try:
+            from .hlo_analysis import HLOAnalyzer
+            an = HLOAnalyzer(hlo)
+            scaled = an.analyze()
+            rec["scaled"] = {k: float(v) for k, v in scaled.items()}
+            rec["scaled_warnings"] = len(an.warnings)
+        except Exception as e:
+            rec["scaled_error"] = str(e)
+        rec["hlo_bytes"] = len(hlo)
+        rec["sharding_fallbacks"] = dict(rules.fallbacks)
+        rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [a for a in ARCHS if a != "llama2_1b"] if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": str(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    mem = rec.get("memory", {}).get("total_per_device_bytes")
+                    sc = rec.get("scaled", {})
+                    extra = (f" mem/dev={mem/2**30:.2f}GiB" if mem else "") + \
+                        f" flops={sc.get('flops', 0):.3e}" + \
+                        f" hbm={sc.get('hbm_bytes', 0)/2**30:.1f}GiB" + \
+                        f" coll={sc.get('collective_bytes', 0)/2**30:.2f}GiB"
+                print(f"[done] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,424 @@
+"""Static analysis of optimized HLO with while-loop trip-count scaling.
+
+``jax.lax.scan`` lowers to HLO while loops whose bodies XLA's
+``cost_analysis`` counts exactly once — a 61-layer scanned transformer would
+report 1/61st of its FLOPs.  This module parses the optimized HLO text,
+resolves each while loop's trip count (from the loop-bound constant threaded
+through the init tuple), and accumulates:
+
+  * flops           — dot/convolution FLOPs (including dots inside fusions),
+  * hbm_bytes       — operand+result bytes of top-level (materializing)
+                      instructions: a fusion-aware HBM-traffic estimate,
+  * collectives     — bytes by collective type,
+
+each scaled by the product of enclosing trip counts.  These feed the
+roofline's three terms (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# opcodes that don't touch HBM (aliases / control / metadata)
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota", "rng-bit-generator",
+}
+
+
+def _shape_nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _leading_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    raw_operands: str = ""
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+_COMP_HEAD = re.compile(r"^(ENTRY )?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_INSTR = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+
+
+def _split_instr_rhs(rhs: str):
+    """rhs like 'f32[2,3]{1,0} dot(%a, %b), attrs' ->
+    (type_str, opcode, operand_names, attrs, raw_operand_str)."""
+    m = _OPCODE.search(rhs)
+    if not m:
+        return None
+    type_str = rhs[:m.start()].strip()
+    opcode = m.group(1)
+    # find matching close paren for the operand list
+    i = m.end()  # position just after '('
+    depth = 1
+    j = i
+    while j < len(rhs) and depth:
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+        j += 1
+    oper_str = rhs[i:j - 1]
+    attrs = rhs[j:].lstrip(", ")
+    operands = re.findall(r"%([\w.\-]+)", oper_str)
+    return type_str, opcode, operands, attrs, oper_str
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_HEAD.match(line.strip())
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        parsed = _split_instr_rhs(m.group(3))
+        if parsed is None:
+            continue
+        type_str, opcode, operands, attrs, raw_ops = parsed
+        ins = Instr(m.group(2), type_str, opcode, operands, attrs,
+                    raw_operands=raw_ops, is_root=bool(m.group(1)))
+        cur.instrs.append(ins)
+        cur.by_name[ins.name] = ins
+    return comps, entry
+
+
+class HLOAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._totals: Dict[str, Dict[str, float]] = {}
+        self.warnings: List[str] = []
+
+    # -- trip count resolution ----------------------------------------------------
+    def _resolve(self, comp: Computation, name: str, depth: int = 0) -> Optional[Instr]:
+        ins = comp.by_name.get(name)
+        while ins is not None and depth < 8 and \
+                ins.opcode in ("copy", "bitcast", "convert"):
+            if not ins.operands:
+                break
+            ins = comp.by_name.get(ins.operands[0])
+            depth += 1
+        return ins
+
+    @staticmethod
+    def _const_int(ins: Instr) -> Optional[int]:
+        if ins.opcode != "constant":
+            return None
+        m = re.search(r"(\d+)", ins.raw_operands or "")
+        return int(m.group(1)) if m else None
+
+    def trip_count(self, while_instr: Instr, comp: Computation,
+                   cond_name: str) -> int:
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+        # Common pattern: the loop bound is an s32 constant in the condition
+        # computation (compared -- possibly inside a wrapped_compare fusion --
+        # against the induction variable).
+        consts = [v for ins in cond.instrs
+                  if "s32" in ins.type_str and (v := self._const_int(ins)) is not None]
+        if consts:
+            return max(1, max(consts))
+        # Fallback: bound threaded through the init tuple: find the compared
+        # tuple index, then resolve that element of the while's init tuple.
+        idxs = []
+        for ins in cond.instrs:
+            if ins.opcode == "get-tuple-element":
+                mi = re.search(r"index=(\d+)", ins.attrs)
+                if mi:
+                    idxs.append(int(mi.group(1)))
+        if while_instr.operands:
+            init = self._resolve(comp, while_instr.operands[0])
+            if init is not None and init.opcode == "tuple":
+                for k in idxs:
+                    if k == 0 or k >= len(init.operands):
+                        continue  # index 0 is the induction variable
+                    elem = self._resolve(comp, init.operands[k])
+                    if elem is not None and (v := self._const_int(elem)) is not None:
+                        return max(1, v)
+        self.warnings.append(f"trip count unresolved for {while_instr.name}")
+        return 1
+
+    # -- flops --------------------------------------------------------------------
+    def _dot_flops(self, ins: Instr, comp: Computation) -> float:
+        out_elems = 0
+        for _dt, dims in _leading_dims(ins.type_str):
+            n = 1
+            for d in dims:
+                n *= d
+            out_elems += n
+        k = 1
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        if m and ins.operands:
+            lhs = comp.by_name.get(ins.operands[0])
+            if lhs is not None:
+                shapes = _leading_dims(lhs.type_str)
+                if shapes:
+                    _, dims = shapes[0]
+                    for ci in m.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+        return 2.0 * out_elems * k
+
+    # -- fusion HBM traffic with slice-aware accounting ---------------------------
+    _TRANSPARENT = ("convert", "bitcast", "copy", "reshape", "transpose",
+                    "bitcast-convert")
+
+    def _fusion_traffic(self, ins: Instr, comp: Computation,
+                        called: Optional[str]) -> float:
+        """Operand+result bytes of a fusion, modelling TPU buffer semantics:
+
+        * a parameter only read through an inner dynamic-slice counts the
+          slice (a scan reading one layer of stacked params);
+        * a root that is a dynamic-update-slice (possibly wrapped in
+          converts/bitcasts) counts only the updated slice, and the aliased
+          base parameter counts nothing (in-place carry update).
+        """
+        fused = self.comps.get(called) if called else None
+        if fused is None:
+            total = _shape_nbytes(ins.type_str)
+            for o in ins.operands:
+                oi = comp.by_name.get(o)
+                if oi is not None and oi.opcode != "constant":
+                    total += _shape_nbytes(oi.type_str)
+            return float(total)
+
+        param_of: Dict[str, int] = {}
+        for fi in fused.instrs:
+            if fi.opcode == "parameter":
+                mi = re.search(r"(\d+)", fi.raw_operands or "")
+                idx = int(mi.group(1)) if mi else len(param_of)
+                param_of[fi.name] = idx
+
+        # consumer map inside the fusion
+        consumers: Dict[str, List[Tuple[Instr, int]]] = {}
+        for fi in fused.instrs:
+            for oi_idx, oname in enumerate(fi.operands):
+                consumers.setdefault(oname, []).append((fi, oi_idx))
+
+        def reaches_only(name: str, pred) -> bool:
+            """True if every consumer path through transparent ops ends at
+            an instruction satisfying pred(instr, operand_idx)."""
+            stack = [name]
+            seen = set()
+            ok_any = False
+            while stack:
+                n = stack.pop()
+                if n in seen:
+                    continue
+                seen.add(n)
+                for ci, cidx in consumers.get(n, []):
+                    if ci.opcode in self._TRANSPARENT:
+                        stack.append(ci.name)
+                    elif pred(ci, cidx):
+                        ok_any = True
+                    else:
+                        return False
+            return ok_any
+
+        # root analysis: chase through transparent wrappers to find DUS roots
+        root = next((fi for fi in fused.instrs if fi.is_root), None)
+        dus_update_bytes: Optional[int] = None
+        dus_base_params: set = set()
+        if root is not None:
+            roots = [root]
+            if root.opcode == "tuple":
+                roots = [fused.by_name.get(o) for o in root.operands if o]
+
+            def chase(r):
+                d = 0
+                while r is not None and r.opcode in self._TRANSPARENT \
+                        and r.operands and d < 8:
+                    r = fused.by_name.get(r.operands[0])
+                    d += 1
+                return r
+
+            resolved = [chase(r) for r in roots]
+            if any(r is not None and r.opcode == "dynamic-update-slice"
+                   for r in resolved):
+                total_bytes = 0
+                for r in resolved:
+                    if r is None:
+                        continue
+                    if r.opcode == "dynamic-update-slice" and len(r.operands) >= 2:
+                        upd = fused.by_name.get(r.operands[1])
+                        total_bytes += (_shape_nbytes(upd.type_str)
+                                        if upd is not None else 0)
+                        # find the aliased base parameter (operand 0 chased up)
+                        base = fused.by_name.get(r.operands[0])
+                        d = 0
+                        while base is not None and base.opcode in self._TRANSPARENT \
+                                and base.operands and d < 8:
+                            base = fused.by_name.get(base.operands[0])
+                            d += 1
+                        if base is not None and base.name in param_of:
+                            dus_base_params.add(param_of[base.name])
+                    else:
+                        total_bytes += _shape_nbytes(r.type_str)
+                dus_update_bytes = total_bytes
+
+        # per-parameter read accounting
+        slice_read: Dict[int, int] = {}
+        for fi in fused.instrs:
+            if fi.opcode != "dynamic-slice":
+                continue
+            for oname in fi.operands[:1]:
+                if oname in param_of:
+                    pidx = param_of[oname]
+                    slice_read[pidx] = slice_read.get(pidx, 0) + \
+                        _shape_nbytes(fi.type_str)
+        only_sliced: set = set()
+        for fname, pidx in param_of.items():
+            if pidx in slice_read and reaches_only(
+                    fname, lambda ci, cidx: ci.opcode == "dynamic-slice"):
+                only_sliced.add(pidx)
+
+        total = dus_update_bytes if dus_update_bytes is not None \
+            else _shape_nbytes(ins.type_str)
+        for i, o in enumerate(ins.operands):
+            oi = comp.by_name.get(o)
+            if oi is None or oi.opcode == "constant":
+                continue
+            if i in dus_base_params:
+                continue  # aliased in-place carry: no traffic
+            if i in only_sliced:
+                total += slice_read[i]
+            else:
+                total += _shape_nbytes(oi.type_str)
+        return float(total)
+
+    # -- per-computation totals ------------------------------------------------------
+    def totals(self, comp_name: str) -> Dict[str, float]:
+        if comp_name in self._totals:
+            return self._totals[comp_name]
+        comp = self.comps.get(comp_name)
+        zero = {"flops": 0.0, "hbm_bytes": 0.0, "transcendentals": 0.0,
+                **{c: 0.0 for c in COLLECTIVE_OPS}}
+        if comp is None:
+            return zero
+        self._totals[comp_name] = dict(zero)  # break cycles
+        tot = dict(zero)
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                trips = self.trip_count(ins, comp, cond.group(1)) if cond else 1
+                if body:
+                    sub = self.totals(body.group(1))
+                    for k2, v in sub.items():
+                        tot[k2] += v * trips
+                continue
+            if op in ("call", "conditional"):
+                for target in re.findall(r"(?:to_apply|branch_computations=\{|"
+                                         r"true_computation|false_computation)"
+                                         r"=?%?([\w.\-]+)", ins.attrs):
+                    sub = self.totals(target)
+                    for k2, v in sub.items():
+                        tot[k2] += v
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                if m:
+                    sub = self.totals(m.group(1))
+                    tot["flops"] += sub["flops"]
+                    tot["transcendentals"] += sub["transcendentals"]
+                tot["hbm_bytes"] += self._fusion_traffic(ins, comp,
+                                                         m.group(1) if m else None)
+                continue
+            if op in ("dot", "convolution"):
+                tot["flops"] += self._dot_flops(ins, comp)
+            if op.rstrip("-startdone") in COLLECTIVE_OPS or \
+                    any(op.startswith(c) for c in COLLECTIVE_OPS):
+                if op.endswith("-done"):
+                    continue
+                base = next(c for c in COLLECTIVE_OPS if op.startswith(c))
+                tot[base] += _shape_nbytes(ins.type_str)
+            if op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                      "logistic", "sine", "cosine"):
+                tot["transcendentals"] += _shape_nbytes(ins.type_str) / 4.0
+            if op in _NO_TRAFFIC:
+                continue
+            tot["hbm_bytes"] += _shape_nbytes(ins.type_str)
+            for o in ins.operands:
+                oi = comp.by_name.get(o)
+                if oi is not None and oi.opcode not in ("constant", "tuple",
+                                                        "get-tuple-element"):
+                    tot["hbm_bytes"] += _shape_nbytes(oi.type_str)
+        self._totals[comp_name] = tot
+        return tot
+
+    def analyze(self) -> Dict[str, float]:
+        if self.entry is None:
+            # fall back: largest computation
+            if not self.comps:
+                return {}
+            self.entry = max(self.comps, key=lambda c: len(self.comps[c].instrs))
+        out = self.totals(self.entry)
+        out["collective_bytes"] = sum(out[c] for c in COLLECTIVE_OPS)
+        out["n_warnings"] = float(len(self.warnings))
+        return out
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    return HLOAnalyzer(hlo_text).analyze()

@@ -1,0 +1,175 @@
+"""Sharding rules: params / optimizer / batches / caches -> PartitionSpec.
+
+Strategy (see DESIGN.md §6):
+  * 2D param sharding: FSDP on ``data`` x tensor-parallel on ``model``;
+  * TP shards attention heads / FFN columns / vocab where divisible by the
+    model-axis size; non-divisible dims gracefully fall back to replication
+    (recorded — the roofline then shows the cost and the hillclimb fixes
+    the worst offenders);
+  * MoE experts shard on ``model`` (EP);
+  * ``pod`` is pure data parallelism.
+Rules match parameter *names*; stacked-layer leading axes get None.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax import tree_util
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes, model_axis_size
+
+
+def _divides(n, k: int) -> bool:
+    return isinstance(n, int) and k > 0 and n % k == 0
+
+
+class ShardingRules:
+    def __init__(self, mesh, *, fsdp: bool = True):
+        self.mesh = mesh
+        self.model = model_axis_size(mesh)
+        self.data = mesh.shape.get("data", 1)
+        self.dp = dp_axes(mesh)
+        self.fsdp = fsdp
+        self.fallbacks: Dict[str, str] = {}
+
+    # -- helpers --------------------------------------------------------------------
+    def _axis(self, name: str, dim_size, axis: Optional[str]):
+        """axis if divisible else None (recorded as fallback)."""
+        if axis is None:
+            return None
+        k = self.model if axis == "model" else self.data
+        if axis == "data" and not self.fsdp:
+            return None
+        if _divides(dim_size, k):
+            return axis
+        self.fallbacks[name] = f"dim {dim_size} % {axis}({k}) != 0 -> replicated"
+        return None
+
+    def spec_for(self, name: str, shape: Tuple[int, ...]) -> P:
+        """PartitionSpec for a parameter leaf by its (path) name."""
+        parts = name.split("/")
+        base = parts[-1]
+        is_moe = "moe" in parts and base in ("w1", "w2", "w3", "router")
+        nd = len(shape)
+
+        def two_d(row_axis, col_axis, rank=2):
+            """rule for trailing `rank` dims; leading dims -> None."""
+            lead = [None] * (nd - rank)
+            dims = list(shape[nd - rank:])
+            axes = [row_axis, col_axis][-rank:] if rank == 2 else [col_axis]
+            out = []
+            for d, a in zip(dims, axes):
+                out.append(self._axis(name, d, a))
+            return P(*(lead + out))
+
+        # embeddings / lm head: vocab-parallel, contraction (D) unsharded so
+        # the logits matmul keeps activations batch-sharded.
+        if base == "embed":
+            return two_d("model", None)
+        if base == "lm_head":
+            return two_d(None, "model")
+        # attention (gqa)
+        if base in ("wq", "wk", "wv"):
+            return two_d("data", "model")
+        if base == "wo":
+            return two_d("model", "data")
+        # MLA
+        if base in ("w_dq", "w_dkv", "w_kr"):
+            return two_d("data", "model")
+        if base in ("w_uq", "w_uk", "w_uv"):  # (r, H, d): shard heads
+            lead = [None] * (nd - 3)
+            return P(*(lead + [self._axis(name, shape[-3], "data"),
+                               self._axis(name, shape[-2], "model"), None]))
+        if base == "w_o" and nd >= 3:          # (H, v, D)
+            lead = [None] * (nd - 3)
+            return P(*(lead + [self._axis(name, shape[-3], "model"), None,
+                               self._axis(name, shape[-1], "data")]))
+        # MoE experts: EP on the expert dim
+        if is_moe and base in ("w1", "w3") and nd >= 3:  # (E, D, F)
+            lead = [None] * (nd - 3)
+            return P(*(lead + [self._axis(name, shape[-3], "model"),
+                               self._axis(name, shape[-2], "data"), None]))
+        if is_moe and base == "w2" and nd >= 3:          # (E, F, D)
+            lead = [None] * (nd - 3)
+            return P(*(lead + [self._axis(name, shape[-3], "model"), None,
+                               self._axis(name, shape[-1], "data")]))
+        if base == "router":
+            return two_d("data", None)
+        # dense FFN
+        if base in ("w1", "w3"):
+            return two_d("data", "model")
+        if base == "w2":
+            return two_d("model", "data")
+        # SSM
+        if base in ("in_proj", "up_proj"):
+            return two_d("data", "model")
+        if base in ("out_proj", "down_proj"):
+            return two_d("model", "data")
+        if base in ("x_proj",):
+            return two_d("model", None)
+        if base in ("dt_proj",):
+            return two_d(None, "model")
+        if base in ("a_log",):
+            return two_d("model", None)
+        # xlstm in-block projections (di, di)
+        if base in ("w_igate", "w_fgate", "w_z", "w_i", "w_f", "w_o_gate"):
+            return two_d("data", "model") if nd >= 2 else P(*([None] * nd))
+        # 1-D / small: replicate
+        return P(*([None] * nd))
+
+    # -- pytree-level APIs --------------------------------------------------------
+    def params_pspecs(self, params_shapes: Any) -> Any:
+        flat, treedef = tree_util.tree_flatten_with_path(params_shapes)
+        out = []
+        for path, leaf in flat:
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            out.append(self.spec_for(name, tuple(leaf.shape)))
+        return tree_util.tree_unflatten(treedef, out)
+
+    def named(self, pspecs: Any) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def batch_pspec(self) -> P:
+        return P(self.dp if len(self.dp) > 1 else self.dp[0])
+
+    def batch_specs(self, batch_shapes: Any) -> Any:
+        """Shard leading (batch) dim on the DP axes when divisible."""
+        dp_size = int(np.prod([self.mesh.shape[a] for a in self.dp]))
+
+        def spec(leaf):
+            b = leaf.shape[0] if leaf.shape else 1
+            if _divides(b, dp_size):
+                return P(*((self.dp if len(self.dp) > 1 else self.dp[0],) +
+                           (None,) * (len(leaf.shape) - 1)))
+            return P(*((None,) * len(leaf.shape)))
+        return jax.tree.map(spec, batch_shapes)
+
+    def cache_specs(self, cache_shapes: Any) -> Any:
+        """Decode caches: (L, B, S, H, hd)-style; batch on dp, heads/feature
+        on model when divisible, else seq on data (long-context B=1)."""
+        dp_size = int(np.prod([self.mesh.shape[a] for a in self.dp]))
+
+        def spec(leaf):
+            shape = leaf.shape
+            nd = len(shape)
+            out = [None] * nd
+            if nd >= 2 and _divides(shape[1], dp_size):
+                out[1] = self.dp if len(self.dp) > 1 else self.dp[0]
+            # shard the widest remaining dim on model if divisible
+            best, best_dim = None, 0
+            for i in range(2, nd):
+                if _divides(shape[i], self.model) and shape[i] > best_dim:
+                    best, best_dim = i, shape[i]
+            if best is not None:
+                out[best] = "model"
+            # B=1 long-context: shard seq (axis 2) on data
+            if nd >= 3 and out[1] is None and _divides(shape[2], self.data) \
+                    and shape[2] >= 4096:
+                out[2] = "data"
+            return P(*out)
+        return jax.tree.map(spec, cache_shapes)

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape_name)`` returns (step_kind, specs) where specs are
+the flat inputs of the corresponding step function — weak-type-correct,
+shardable, no device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ModelConfig
+from ..models import init_cache, init_params
+from ..optim import AdamWConfig, init_state
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    D = cfg.d_model
+    dt = cfg.jax_dtype
+    if cfg.input_mode == "tokens":
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        return {"frame_embed": jax.ShapeDtypeStruct((batch, seq, D), dt),
+                "labels": jax.ShapeDtypeStruct((batch, seq, cfg.n_codebooks),
+                                               jnp.int32)}
+    if cfg.input_mode == "vlm":
+        s_txt = max(seq - cfg.vis_tokens, 8)
+        return {"vis_embed": jax.ShapeDtypeStruct((batch, cfg.vis_tokens, D), dt),
+                "tokens": jax.ShapeDtypeStruct((batch, s_txt), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, s_txt), jnp.int32)}
+    raise ValueError(cfg.input_mode)
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    if cfg.input_mode in ("tokens", "vlm"):
+        return {"token": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    return {"frame_embed": jax.ShapeDtypeStruct((batch, 1, cfg.d_model),
+                                                cfg.jax_dtype)}
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def opt_specs(cfg: ModelConfig, p_specs: Any) -> Any:
+    ocfg = AdamWConfig(state_dtype=jnp.bfloat16
+                       if cfg.optimizer_dtype == "bfloat16" else jnp.float32)
+    return jax.eval_shape(lambda p: init_state(p, ocfg), p_specs)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Tuple[str, Dict[str, Any]]:
+    spec = SHAPES[shape_name]
+    kind = spec["kind"]
+    b, s = spec["global_batch"], spec["seq_len"]
+    p = params_specs(cfg)
+    if kind == "train":
+        return "train", {"params": p, "opt_state": opt_specs(cfg, p),
+                         "batch": batch_specs(cfg, b, s)}
+    if kind == "prefill":
+        batch = dict(batch_specs(cfg, b, s))
+        batch.pop("labels", None)
+        return "prefill", {"params": p, "batch": batch}
+    if kind == "decode":
+        return "decode", {"params": p,
+                          "state": cache_specs(cfg, b, s),
+                          "inp": decode_input_specs(cfg, b)}
+    raise ValueError(kind)

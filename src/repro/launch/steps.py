@@ -1,0 +1,81 @@
+"""Step functions lowered by the dry-run and driven by the trainer/server."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.compression import CompressionState, compress_gradients
+from ..models import decode_step as model_decode_step
+from ..models import loss_fn, prefill as model_prefill
+from ..optim import AdamWConfig, apply_updates
+
+
+def adamw_config_for(cfg: ModelConfig) -> AdamWConfig:
+    return AdamWConfig(state_dtype=jnp.bfloat16
+                       if cfg.optimizer_dtype == "bfloat16" else jnp.float32)
+
+
+def _grad_fn(cfg: ModelConfig, grad_accum: int):
+    """value_and_grad, optionally micro-batched (gradient accumulation).
+
+    Accumulation slashes activation peak (logits and attention transients
+    scale with the micro-batch) at zero FLOP cost; grads accumulate in the
+    params' own dtype, sharded like the params.
+    """
+    base = jax.value_and_grad(lambda p, b: loss_fn(cfg, p, b))
+    if grad_accum <= 1:
+        return base
+
+    def accum(params, batch):
+        micro = jax.tree.map(
+            lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = base(params, mb)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, g_acc, g)), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), micro)
+        inv = 1.0 / grad_accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+    return accum
+
+
+def make_train_step(cfg: ModelConfig, *, compress: bool = False,
+                    grad_accum: int = 1):
+    ocfg = adamw_config_for(cfg)
+    gfn = _grad_fn(cfg, grad_accum)
+
+    if compress:
+        def train_step(params, opt_state, comp_state, batch):
+            loss, grads = gfn(params, batch)
+            grads, comp_state = compress_gradients(grads, comp_state)
+            new_params, new_opt = apply_updates(params, grads, opt_state, ocfg)
+            return loss, new_params, new_opt, comp_state
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        loss, grads = gfn(params, batch)
+        new_params, new_opt = apply_updates(params, grads, opt_state, ocfg)
+        return loss, new_params, new_opt
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return model_prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, state, inp):
+        return model_decode_step(cfg, params, state, inp)
+    return serve_step

@@ -1,0 +1,5 @@
+from .lm import (DecodeState, decode_step, forward, init_cache, init_params,
+                 loss_fn, prefill)
+
+__all__ = ["DecodeState", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "prefill"]

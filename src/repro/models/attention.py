@@ -1,0 +1,261 @@
+"""Attention variants: causal GQA/MQA (dense + blockwise), sliding window, MLA.
+
+Dense is used for small/symbolic-shape graphs (the dynamic-shape optimizer
+path); blockwise (scan-based online softmax — the pure-JAX twin of the
+Pallas flash kernel) is used on the compiled path for long sequences so the
+S×S score matrix is never materialized.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _grouped(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B,S,Hq,hd) -> (B,S,Hkv,G,hd)."""
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    q_offset=0,
+                    window: Optional[int] = None,
+                    pad_mask: Optional[jax.Array] = None,
+                    softmax_scale: Optional[float] = None) -> jax.Array:
+    """q (B,S,Hq,hd), k/v (B,T,Hkv,hd) -> (B,S,Hq,hd).
+
+    ``q_offset``: absolute position of q[0] (for decode, q_offset=T-1).
+    ``window``: sliding-window size (attend to [pos-window+1, pos]).
+    """
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qg = _grouped(q, hkv) * scale
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(s)[:, None]        # (S,1)
+    kv_pos = jnp.arange(t)[None, :]                   # (1,T)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if pad_mask is not None:  # (B,T) True=valid
+        scores = jnp.where(pad_mask[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, v.shape[-1]).astype(q.dtype)
+
+
+_NO_WINDOW = 2 ** 30  # sentinel: effectively unbounded sliding window
+
+
+def _block_mask(sc, kv_pos, q_pos, causal, window, mblk):
+    """Apply causal/window/padding masks to a score block (in-loop: the
+    block position comes from a loop-carried counter so XLA cannot hoist a
+    precomputed (nblk, ..., S, blk) mask stack out of the scan).
+
+    ``window`` may be a traced scalar (per-layer windows scanned over a
+    layer stack); the sentinel ``_NO_WINDOW`` disables it numerically.
+    """
+    neg = jnp.float32(NEG_INF)
+    if causal:
+        sc = jnp.where((kv_pos[None, :] <= q_pos[:, None])[None, None, None],
+                       sc, neg)
+    if window is not None:
+        sc = jnp.where((kv_pos[None, :] > q_pos[:, None] - window)
+                       [None, None, None], sc, neg)
+    if mblk is not None:
+        sc = jnp.where(mblk[:, None, None, None, :], sc, neg)
+    return sc
+
+
+def _flash_fwd_scan(q, kb, vb, mb, q_pos, *, causal, window, block_kv, scale):
+    """Online-softmax forward over KV blocks.  Returns out (f32) and lse."""
+    b, s, hkv, g, hd = q.shape
+    hd_v = vb.shape[-1]
+
+    def body(carry, xs):
+        m, l, acc, c = carry
+        kblk, vblk = xs[0], xs[1]
+        mblk = xs[2] if len(xs) > 2 else None
+        kv_pos = c * block_kv + jnp.arange(block_kv)
+        sc = jnp.einsum("bshgd,bthd->bhgst", q, kblk,
+                        preferred_element_type=jnp.float32) * scale
+        sc = _block_mask(sc, kv_pos, q_pos, causal, window, mblk)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgst,bthd->bshgd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new, c + 1), None
+
+    m0 = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, s, hkv, g, hd_v), jnp.float32)
+    xs = (kb, vb) if mb is None else (kb, vb, mb)
+    (m, l, acc, _), _ = jax.lax.scan(
+        body, (m0, l0, a0, jnp.zeros((), jnp.int32)), xs)
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe.transpose(0, 3, 1, 2)[..., None]
+    lse = m + jnp.log(l_safe)       # (b, hkv, g, s)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash_attention(q, k, v, pad_mask, window, causal, block_kv, scale,
+                     q_offset):
+    """window is a traced int32 scalar (``_NO_WINDOW`` disables)."""
+    out, _ = _flash_attention_fwd(q, k, v, pad_mask, window, causal, block_kv,
+                                  scale, q_offset)
+    return out
+
+
+def _prep_blocks(k, v, pad_mask, block_kv):
+    b, t, hkv, hd = k.shape
+    nblk = -(-t // block_kv)
+    t_pad = nblk * block_kv
+    if t_pad != t:
+        pad = [(0, 0), (0, t_pad - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        if pad_mask is not None:
+            pad_mask = jnp.pad(pad_mask, [(0, 0), (0, t_pad - t)])
+        else:
+            pad_mask = jnp.broadcast_to(jnp.arange(t_pad)[None, :] < t, (b, t_pad))
+    kb = k.reshape(b, nblk, block_kv, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block_kv, hkv, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    mb = (pad_mask.reshape(b, nblk, block_kv).transpose(1, 0, 2)
+          if pad_mask is not None else None)
+    return kb, vb, mb, nblk, t_pad
+
+
+def _flash_attention_fwd(q, k, v, pad_mask, window, causal, block_kv, scale,
+                         q_offset):
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = _grouped(q, hkv)
+    kb, vb, mb, _, _ = _prep_blocks(k, v, pad_mask, block_kv)
+    q_pos = q_offset + jnp.arange(s)
+    out, lse = _flash_fwd_scan(qg, kb, vb, mb, q_pos, causal=causal,
+                               window=window, block_kv=block_kv, scale=scale)
+    out_ret = out.reshape(b, s, hq, v.shape[-1]).astype(q.dtype)
+    return out_ret, (q, k, v, pad_mask, window, out, lse)
+
+
+def _flash_attention_bwd(causal, block_kv, scale, q_offset, res, d_out):
+    """Flash backward: re-stream KV blocks, never materialize (S,T) probs."""
+    q, k, v, pad_mask, window, out, lse = res
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    g = hq // hkv
+    qg = _grouped(q, hkv).astype(jnp.float32)                 # (b,s,hkv,g,hd)
+    do = _grouped(d_out.astype(jnp.float32), hkv)             # (b,s,hkv,g,hdv)
+    kb, vb, mb, nblk, t_pad = _prep_blocks(k, v, pad_mask, block_kv)
+    q_pos = q_offset + jnp.arange(s)
+    # delta = rowsum(do * o): (b,hkv,g,s)
+    delta = jnp.einsum("bshgd,bshgd->bhgs", do, out)
+
+    def body(carry, xs):
+        dq, c = carry
+        kblk, vblk = xs[0], xs[1]
+        mblk = xs[2] if len(xs) > 2 else None
+        kv_pos = c * block_kv + jnp.arange(block_kv)
+        sc = jnp.einsum("bshgd,bthd->bhgst", qg, kblk.astype(jnp.float32)) \
+            * scale
+        sc = _block_mask(sc, kv_pos, q_pos, causal, window, mblk)
+        p = jnp.exp(sc - lse[..., None])                       # (b,hkv,g,s,t)
+        dv_blk = jnp.einsum("bhgst,bshgd->bthd", p, do)
+        dp = jnp.einsum("bshgd,bthd->bhgst", do, vblk.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_blk = jnp.einsum("bhgst,bthd->bshgd", ds, kblk.astype(jnp.float32))
+        dk_blk = jnp.einsum("bhgst,bshgd->bthd", ds, qg)
+        return (dq + dq_blk, c + 1), (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, s, hkv, g, hd), jnp.float32)
+    xs = (kb, vb) if mb is None else (kb, vb, mb)
+    (dq, _), (dk_b, dv_b) = jax.lax.scan(
+        body, (dq0, jnp.zeros((), jnp.int32)), xs)
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(b, t_pad, hkv, hd)[:, :t]
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(b, t_pad, hkv, hd_v)[:, :t]
+    dq_out = dq.reshape(b, s, hq, hd)
+    return (dq_out.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_flash_attention.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        q_offset=0,
+                        window: Optional[int] = None,
+                        pad_mask: Optional[jax.Array] = None,
+                        block_kv: int = 512,
+                        softmax_scale: Optional[float] = None) -> jax.Array:
+    """Flash-style attention: online-softmax forward over KV blocks and a
+    block-restreaming custom VJP — the (S,T) score/prob matrices are never
+    materialized in either pass.  This is the pure-JAX twin of the Pallas
+    kernel in ``repro.kernels.flash_attention``.
+    """
+    hd = q.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    w = jnp.asarray(_NO_WINDOW if window is None else window, jnp.int32)
+    return _flash_attention(q, k, v, pad_mask, w, causal, block_kv,
+                            scale, q_offset)
+
+
+def attention(q, k, v, *, causal=True, q_offset=0, window=None, pad_mask=None,
+              softmax_scale=None, block_kv: int = 512,
+              blockwise_threshold: int = 2048) -> jax.Array:
+    """Dispatch dense vs blockwise.  Symbolic shapes always go dense."""
+    t = k.shape[1]
+    concrete = isinstance(t, int)
+    if concrete and t > blockwise_threshold:
+        return blockwise_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                   window=window, pad_mask=pad_mask,
+                                   block_kv=block_kv, softmax_scale=softmax_scale)
+    return dense_attention(q, k, v, causal=causal, q_offset=q_offset,
+                           window=window, pad_mask=pad_mask,
+                           softmax_scale=softmax_scale)
+
+
+# -- KV cache -------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, Smax, Hkv, hd)
+    v: jax.Array
+    length: jax.Array  # () int32 — tokens currently valid
+
+
+def kv_cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
+    """Append one step (B,1,Hkv,hd) at position cache.length."""
+    idx = cache.length
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, idx, axis=1)
+    return KVCache(k, v, cache.length + k_new.shape[1])
+
+
+def decode_attention(q: jax.Array, cache: KVCache, *,
+                     window: Optional[int] = None,
+                     softmax_scale: Optional[float] = None) -> jax.Array:
+    """One-token decode: q (B,1,Hq,hd) against the cache (masked by length)."""
+    t = cache.k.shape[1]
+    valid = jnp.arange(t)[None, :] < cache.length  # (1,T)
+    return dense_attention(q, cache.k, cache.v, causal=False, window=window,
+                           q_offset=cache.length - 1,
+                           pad_mask=jnp.broadcast_to(valid, (q.shape[0], t)),
+                           softmax_scale=softmax_scale)

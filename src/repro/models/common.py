@@ -1,0 +1,133 @@
+"""Shared building blocks for all architectures (pure JAX, no flax)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+def _context_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def shard_hint(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint that no-ops outside a mesh context.
+
+    ``axes``: one entry per dim — an axis name, a tuple of names, or None.
+    Axes not present in the ambient mesh, or not dividing the dim, drop to
+    None, so model code works on any mesh (and on plain CPU).
+    """
+    mesh = _context_mesh()
+    if mesh is None:
+        return x
+    clean = []
+    for dim, a in zip(x.shape, axes):
+        names = a if isinstance(a, tuple) else ((a,) if a else ())
+        names = tuple(n for n in names if n in mesh.axis_names)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if not names or not isinstance(dim, int) or size == 0 or dim % size:
+            clean.append(None)
+        else:
+            clean.append(names if len(names) > 1 else names[0])
+    spec = PartitionSpec(*clean)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+DP = ("pod", "data")  # data-parallel axes (pod present on multi-pod meshes)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd//2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd//2)
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- initializers --------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32, scale: float = 1.0):
+    fan_in = shape[in_axis]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic fold-in key generator for nested param init."""
+
+    def __init__(self, key):
+        self._key = key
+        self._i = 0
+
+    def __call__(self):
+        self._i += 1
+        return jax.random.fold_in(self._key, self._i)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE over valid positions; logits (..., V), labels int (...).
+
+    Partition-friendly for vocab-sharded logits: the label logit is picked
+    with a fused ``iota == label`` masked reduction (local compare + psum)
+    instead of take_along_axis (which would gather across the sharded
+    vocab dim), and log-sum-exp reduces over vocab the same way.
+    """
+    v = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    shifted = lg - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+    onehot = (iota == labels[..., None].astype(jnp.int32))
+    label_logit = jnp.sum(jnp.where(onehot, shifted, 0.0), axis=-1)
+    ll = label_logit - lse
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

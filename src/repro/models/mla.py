@@ -1,0 +1,120 @@
+"""Multi-head Latent Attention (DeepSeek-V3 style).
+
+Prefill/train: expand the compressed KV latent to per-head K/V and run
+standard attention.  Decode: the *absorbed* path — cache only the latent
+(r_kv per token) plus the shared RoPE key (qk_rope per token), and fold
+W_UK / W_UV into the query/output projections.  This is the MLA memory
+win: 576 cached floats/token vs 2·H·128.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, dense_attention
+from .common import apply_rope, dense_init, rms_norm
+
+
+class MLAConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+    r_kv: int = 512
+    r_q: int = 1536  # 0 -> full-rank Q projection
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    qd = cfg.qk_nope + cfg.qk_rope
+    p = {
+        "w_dkv": dense_init(ks[0], (d, cfg.r_kv), dtype=dtype),
+        "kv_norm": jnp.zeros((cfg.r_kv,), dtype),
+        "w_uk": dense_init(ks[1], (cfg.r_kv, h, cfg.qk_nope), dtype=dtype),
+        "w_uv": dense_init(ks[2], (cfg.r_kv, h, cfg.v_dim), dtype=dtype),
+        "w_kr": dense_init(ks[3], (d, cfg.qk_rope), dtype=dtype),
+        "w_o": dense_init(ks[4], (h, cfg.v_dim, d), in_axis=0, dtype=dtype),
+    }
+    if cfg.r_q:
+        p["w_dq"] = dense_init(ks[5], (d, cfg.r_q), dtype=dtype)
+        p["q_norm"] = jnp.zeros((cfg.r_q,), dtype)
+        p["w_uq"] = dense_init(ks[6], (cfg.r_q, h, qd), dtype=dtype)
+    else:
+        p["w_q"] = dense_init(ks[7], (d, h, qd), dtype=dtype)
+    return p
+
+
+def _queries(params: Dict, cfg: MLAConfig, x: jax.Array, positions) -> Tuple[jax.Array, jax.Array]:
+    if cfg.r_q:
+        cq = rms_norm(x @ params["w_dq"], params["q_norm"])
+        q = jnp.einsum("bsr,rhd->bshd", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhq->bshq", x, params["w_q"])
+    q_nope = q[..., :cfg.qk_nope]
+    q_rope = apply_rope(q[..., cfg.qk_nope:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_prefill(params: Dict, cfg: MLAConfig, x: jax.Array,
+                q_offset=0) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x (B,S,D) -> (out (B,S,D), (c_kv, k_rope) latent cache entries)."""
+    b, s, d = x.shape
+    positions = q_offset + jnp.arange(s)[None, :]
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_norm"])       # (B,S,r)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)                            # (B,S,1,rope)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, params["w_uv"])
+    h = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope))],
+                        axis=-1)
+    scale = 1.0 / math.sqrt(cfg.qk_nope + cfg.qk_rope)
+    attn = dense_attention(q, k, v, causal=True, q_offset=q_offset,
+                           softmax_scale=scale)
+    out = jnp.einsum("bshd,hdm->bsm", attn, params["w_o"])
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # (B, Smax, r_kv)
+    k_rope: jax.Array   # (B, Smax, qk_rope)
+    length: jax.Array
+
+
+def mla_decode(params: Dict, cfg: MLAConfig, x: jax.Array,
+               cache: MLACache) -> Tuple[jax.Array, MLACache]:
+    """Absorbed decode: x (B,1,D); cache latent, never expand K/V."""
+    b = x.shape[0]
+    pos = (cache.length - 1) + jnp.arange(1)[None, :] + 1  # next position
+    pos = jnp.broadcast_to(cache.length[None, None], (b, 1))
+    q_nope, q_rope = _queries(params, cfg, x, pos)
+    c_new = rms_norm(x @ params["w_dkv"], params["kv_norm"])       # (B,1,r)
+    kr_new = apply_rope((x @ params["w_kr"])[:, :, None, :], pos,
+                        cfg.rope_theta)[:, :, 0, :]                # (B,1,rope)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, cache.length, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, cache.length, axis=1)
+    new_len = cache.length + 1
+    t = c_kv.shape[1]
+    valid = (jnp.arange(t)[None, :] < new_len)                     # (1,T)
+
+    # absorb W_UK into q: (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, params["w_uk"])
+    scale = 1.0 / math.sqrt(cfg.qk_nope + cfg.qk_rope)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                         c_kv.astype(jnp.float32)) +
+              jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", p, c_kv.astype(jnp.float32))
+    attn = jnp.einsum("bshr,rhd->bshd", ctx_lat, params["w_uv"].astype(jnp.float32))
+    out = jnp.einsum("bshd,hdm->bsm", attn.astype(x.dtype), params["w_o"])
+    return out, MLACache(c_kv, k_rope, new_len)

@@ -1,0 +1,170 @@
+"""Mamba-style selective SSM (diagonal state) with chunked scan.
+
+Training/prefill uses a chunkwise algorithm: ``lax.scan`` over chunks with
+an ``associative_scan`` inside each (rematerialized), so compiled activation
+memory is O(B · n_chunks · d_inner · N) boundary states plus one chunk's
+transient — not the full (B, S, d_inner, N) tensor.  Decode is the O(1)
+recurrent update.  This is the TPU-native adaptation of mamba's fused GPU
+kernel (which keeps h in SRAM): we keep the chunk transient in VMEM-scale
+working sets and let XLA fuse the elementwise chain.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int
+    d_state: int = 16
+    dt_rank: int = 0        # 0 -> ceil(d_model/16)
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.rank
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, di), dtype=dtype, scale=1.0),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, r + 2 * n), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (r, di), dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.0, dtype),  # softplus ~= small init dt
+        "a_log": jnp.log(a),                       # (di, N), A = -exp(a_log)
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, cfg.d_model), dtype=dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv: u (B,S,di), w (K,di)."""
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = init_state
+    up = jnp.concatenate([pad, u], axis=1)
+    s = u.shape[1]
+    # K is tiny (4): unrolled taps over shifted windows, XLA fuses the chain
+    out = sum(up[:, i:i + s, :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _ssm_params_from_u(params: Dict, cfg: SSMConfig, u: jax.Array):
+    """u (B,S,di) -> dt (B,S,di), Bm (B,S,N), Cm (B,S,N)."""
+    r, n = cfg.rank, cfg.d_state
+    proj = u @ params["x_proj"]
+    dt = jax.nn.softplus(proj[..., :r] @ params["dt_proj"] + params["dt_bias"])
+    bm = proj[..., r:r + n]
+    cm = proj[..., r + n:]
+    return dt, bm, cm
+
+
+def _chunk_scan(log_a: jax.Array, bu: jax.Array, h0: jax.Array):
+    """Associative scan within a chunk.
+
+    log_a, bu: (B, Q, di, N); h0: (B, di, N).
+    h_t = exp(log_a_t) * h_{t-1} + bu_t
+    Returns hs (B, Q, di, N) and final h (B, di, N).
+    """
+    def combine(x, y):
+        (la1, b1), (la2, b2) = x, y
+        return la1 + la2, b1 * jnp.exp(la2) + b2
+
+    la_c, b_c = jax.lax.associative_scan(combine, (log_a, bu), axis=1)
+    hs = jnp.exp(la_c) * h0[:, None] + b_c
+    return hs, hs[:, -1]
+
+
+def selective_scan_chunked(u: jax.Array, dt: jax.Array, a_log: jax.Array,
+                           bm: jax.Array, cm: jax.Array, d_skip: jax.Array,
+                           h0: Optional[jax.Array] = None,
+                           chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """u,dt (B,S,di); bm,cm (B,S,N); returns y (B,S,di), h_final (B,di,N)."""
+    b, s, di = u.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    nchunks = -(-s // q)
+    s_pad = nchunks * q
+    if s_pad != s:
+        padw = [(0, 0), (0, s_pad - s), (0, 0)]
+        u, dt, bm, cm = (jnp.pad(t, padw) for t in (u, dt, bm, cm))
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (di, N)
+
+    def chunk_body(h, xs):
+        uc, dtc, bmc, cmc = xs  # (B, Q, ...)
+        log_ac = dtc.astype(jnp.float32)[..., None] * a  # (B,Q,di,N)
+        buc = (dtc * uc).astype(jnp.float32)[..., None] * bmc[:, :, None, :]
+        hs, h_next = _chunk_scan(log_ac, buc, h)
+        yc = jnp.einsum("bqdn,bqn->bqd", hs, cmc.astype(jnp.float32))
+        yc = yc + uc.astype(jnp.float32) * d_skip[None, None, :]
+        return h_next, yc.astype(u.dtype)
+
+    xs = tuple(t.reshape(b, nchunks, q, -1).transpose(1, 0, 2, 3)
+               for t in (u, dt, bm, cm))
+    h_final, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s_pad, di)[:, :s]
+    return y, h_final
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, K-1, di) last inputs
+    h: jax.Array      # (B, di, N)
+
+
+def ssm_apply(params: Dict, cfg: SSMConfig, x: jax.Array,
+              chunk: Optional[int] = None) -> jax.Array:
+    """Full-sequence forward (training/prefill). x (B,S,D) -> (B,S,D)."""
+    ui = x @ params["in_proj"]
+    u, z = jnp.split(ui, 2, axis=-1)
+    u = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"]))
+    dt, bm, cm = _ssm_params_from_u(params, cfg, u)
+    y, _ = selective_scan_chunked(u, dt, params["a_log"], bm, cm,
+                                  params["d_skip"].astype(jnp.float32),
+                                  chunk=chunk or cfg.chunk)
+    return (y * jax.nn.silu(z)) @ params["out_proj"]
+
+
+def ssm_init_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+        h=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    )
+
+
+def ssm_decode_step(params: Dict, cfg: SSMConfig, x: jax.Array,
+                    cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    """One token: x (B,1,D) -> (B,1,D), O(1) state update."""
+    ui = x @ params["in_proj"]
+    u, z = jnp.split(ui, 2, axis=-1)              # (B,1,di)
+    window = jnp.concatenate([cache.conv, u], axis=1)  # (B,K,di)
+    w = params["conv_w"]
+    u_conv = jnp.einsum("bkd,kd->bd", window, w)[:, None, :] + params["conv_b"]
+    u_conv = jax.nn.silu(u_conv)
+    dt, bm, cm = _ssm_params_from_u(params, cfg, u_conv)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    log_a = dt[:, 0].astype(jnp.float32)[..., None] * a          # (B,di,N)
+    bu = (dt[:, 0] * u_conv[:, 0]).astype(jnp.float32)[..., None] * \
+        bm[:, 0][:, None, :]
+    h = jnp.exp(log_a) * cache.h + bu
+    y = jnp.einsum("bdn,bn->bd", h, cm[:, 0].astype(jnp.float32)) + \
+        u_conv[:, 0].astype(jnp.float32) * params["d_skip"]
+    y = (y[:, None, :].astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return y, SSMCache(conv=window[:, 1:], h=h)

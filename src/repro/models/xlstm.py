@@ -1,0 +1,303 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) and scan sLSTM.
+
+mLSTM implements the stabilized chunkwise algorithm (official xLSTM form):
+within a chunk, a (Q×Q) decay-masked score matrix; across chunks, the
+(hd×hd) matrix memory carried with a log-space stabilizer ``m``.  Decode is
+the O(1) recurrence.  sLSTM (scalar memory) runs as a ``lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+NEG_INF = -1e30
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0
+    chunk: int = 128
+    conv_kernel: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# -- mLSTM ---------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "up_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], (di, di), dtype=dtype),
+        "wk": dense_init(ks[3], (di, di), dtype=dtype),
+        "wv": dense_init(ks[4], (di, di), dtype=dtype),
+        "w_igate": dense_init(ks[5], (di, h), dtype=jnp.float32),
+        "b_igate": jnp.zeros((h,), jnp.float32),
+        "w_fgate": dense_init(ks[6], (di, h), dtype=jnp.float32),
+        "b_fgate": jnp.full((h,), 3.0, jnp.float32),  # start remembering
+        "out_norm": jnp.zeros((di,), dtype),
+        "down_proj": dense_init(ks[7], (di, d), dtype=dtype),
+    }
+
+
+def _heads(x: jax.Array, h: int) -> jax.Array:
+    b, s, di = x.shape
+    return x.reshape(b, s, h, di // h).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+
+
+def _causal_conv(u, w, b):
+    k = w.shape[0]
+    pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    s = u.shape[1]
+    return sum(up[:, i:i + s, :] * w[i][None, None, :] for i in range(k)) + b
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk: int = 128):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,S,hd); log_i, log_f: (B,H,S).
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)) or None.
+    Returns h (B,H,S,hd), final state.
+    """
+    b, h, s, hd = q.shape
+    qc = min(chunk, s)
+    nch = -(-s // qc)
+    s_pad = nch * qc
+    if s_pad != s:
+        padw = [(0, 0), (0, 0), (0, s_pad - s), (0, 0)]
+        q, k, v = (jnp.pad(t, padw) for t in (q, k, v))
+        log_i = jnp.pad(log_i, [(0, 0), (0, 0), (0, s_pad - s)],
+                        constant_values=NEG_INF)
+        log_f = jnp.pad(log_f, [(0, 0), (0, 0), (0, s_pad - s)])
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, xs):
+        # NOTE: q/k/v stay in their storage dtype inside the scan xs and all
+        # matmuls accumulate in f32 via preferred_element_type — an explicit
+        # astype(f32) here would be hoisted by XLA into a pre-converted f32
+        # copy of the whole stacked (nchunks, ...) tensor (2x HBM traffic).
+        c_p, n_p, m_p = carry
+        qx, kx, vx, lix, lfx = xs  # (B,H,Q,hd) / (B,H,Q)
+        f32 = jnp.float32
+        F = jnp.cumsum(lfx, axis=-1)                       # (B,H,Q) decay incl t
+        # log decay matrix: D[t,j] = F_t - F_j + li_j  (j<=t)
+        logd = F[..., :, None] - F[..., None, :] + lix[..., None, :]
+        tri = jnp.tril(jnp.ones((qc, qc), bool))
+        logd = jnp.where(tri[None, None], logd, NEG_INF)
+        m_intra = logd.max(axis=-1)                        # (B,H,Q)
+        m_t = jnp.maximum(m_p[..., None] + F, m_intra)
+        w_intra = jnp.exp(logd - m_t[..., None])           # (B,H,Q,Q) f32
+        sc = jnp.einsum("bhqd,bhjd->bhqj", qx, kx,
+                        preferred_element_type=f32) * scale
+        pw = (sc * w_intra)
+        num = jnp.einsum("bhqj,bhjd->bhqd", pw.astype(qx.dtype), vx,
+                         preferred_element_type=f32)
+        # denominator: |q·n_t| where n_t = decayed n_prev + sum_j w k_j
+        w_inter = jnp.exp(m_p[..., None] + F - m_t)        # (B,H,Q)
+        num = num + w_inter[..., None] * jnp.einsum(
+            "bhqd,bhde->bhqe", qx, c_p.astype(qx.dtype),
+            preferred_element_type=f32) * scale
+        n_t = w_inter[..., None] * n_p[:, :, None, :] + jnp.einsum(
+            "bhqj,bhjd->bhqd", w_intra.astype(qx.dtype), kx,
+            preferred_element_type=f32)
+        den = jnp.abs(jnp.einsum("bhqd,bhqd->bhq", qx.astype(f32) * scale,
+                                 n_t))
+        hx = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        # carry update
+        tot_F = F[..., -1]                                  # (B,H)
+        m_out = jnp.maximum(m_p + tot_F,
+                            (tot_F[..., None] - F + lix).max(axis=-1))
+        decay_c = jnp.exp(m_p + tot_F - m_out)
+        w_k = jnp.exp(tot_F[..., None] - F + lix - m_out[..., None])  # (B,H,Q)
+        kw = kx.astype(f32) * w_k[..., None]
+        c_n = decay_c[..., None, None] * c_p + jnp.einsum(
+            "bhqd,bhqe->bhde", kw.astype(qx.dtype), vx,
+            preferred_element_type=f32)
+        n_n = decay_c[..., None] * n_p + kw.sum(axis=2)
+        return (c_n, n_n, m_out), hx
+
+    xs = tuple(t.reshape(b, h, nch, qc, -1).transpose(2, 0, 1, 3, 4)
+               for t in (q, k, v)) + tuple(
+        t.reshape(b, h, nch, qc).transpose(2, 0, 1, 3) for t in (log_i, log_f))
+    (c_f, n_f, m_f), hs = jax.lax.scan(jax.checkpoint(body), (c0, n0, m0), xs)
+    hx = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s_pad, hd)[:, :, :s]
+    return hx.astype(q.dtype), (c_f, n_f, m_f)
+
+
+def mlstm_apply(params: Dict, cfg: XLSTMConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence mLSTM block. x (B,S,D) -> (B,S,D)."""
+    from .common import DP, shard_hint
+    up = x @ params["up_proj"]
+    main, z = jnp.split(up, 2, axis=-1)             # (B,S,di)
+    conv = jax.nn.silu(_causal_conv(main, params["conv_w"], params["conv_b"]))
+    h = cfg.n_heads
+    # mixer runs batch-parallel: with n_heads(4) < model-axis size the head
+    # reshape defeats TP propagation, so pin batch sharding here (redundant
+    # mixer compute on the model axis is ~8% of the block's FLOPs).
+    q = shard_hint(_heads(conv @ params["wq"], h), DP, None, None, None)
+    k = shard_hint(_heads(conv @ params["wk"], h), DP, None, None, None)
+    v = shard_hint(_heads(main @ params["wv"], h), DP, None, None, None)
+    log_i = (conv @ params["w_igate"] + params["b_igate"]).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(
+        (conv @ params["w_fgate"] + params["b_fgate"])).transpose(0, 2, 1)
+    hx, _ = mlstm_chunkwise(q, k, v, log_i.astype(jnp.float32),
+                            log_f.astype(jnp.float32), chunk=cfg.chunk)
+    hx = hx.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], cfg.d_inner)
+    # per-dim RMS-style output norm then skip-gate
+    var = jnp.mean(jnp.square(hx.astype(jnp.float32)), axis=-1, keepdims=True)
+    hx = (hx.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) *
+          (1.0 + params["out_norm"])).astype(x.dtype)
+    return (hx * jax.nn.silu(z)) @ params["down_proj"]
+
+
+class MLSTMCache(NamedTuple):
+    conv: jax.Array   # (B, K-1, di)
+    c: jax.Array      # (B, H, hd, hd)
+    n: jax.Array      # (B, H, hd)
+    m: jax.Array      # (B, H)
+
+
+def mlstm_init_cache(cfg: XLSTMConfig, batch: int, dtype=jnp.float32) -> MLSTMCache:
+    h, hd = cfg.n_heads, cfg.head_dim
+    return MLSTMCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def mlstm_decode_step(params: Dict, cfg: XLSTMConfig, x: jax.Array,
+                      cache: MLSTMCache) -> Tuple[jax.Array, MLSTMCache]:
+    """One-token recurrent mLSTM step. x (B,1,D)."""
+    up = x @ params["up_proj"]
+    main, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate([cache.conv, main], axis=1)
+    conv = jnp.einsum("bkd,kd->bd", window, params["conv_w"])[:, None, :] + \
+        params["conv_b"]
+    conv = jax.nn.silu(conv)
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = _heads(conv @ params["wq"], h)[:, :, 0].astype(jnp.float32)   # (B,H,hd)
+    k = _heads(conv @ params["wk"], h)[:, :, 0].astype(jnp.float32)
+    v = _heads(main @ params["wv"], h)[:, :, 0].astype(jnp.float32)
+    li = (conv @ params["w_igate"] + params["b_igate"])[:, 0]         # (B,H)
+    lf = jax.nn.log_sigmoid((conv @ params["w_fgate"] + params["b_fgate"]))[:, 0]
+    m_new = jnp.maximum(lf + cache.m, li)
+    di_ = jnp.exp(li - m_new)
+    df = jnp.exp(lf + cache.m - m_new)
+    c_new = df[..., None, None] * cache.c + di_[..., None, None] * \
+        (k[..., :, None] * v[..., None, :])
+    n_new = df[..., None] * cache.n + di_[..., None] * k
+    scale = 1.0 / math.sqrt(hd)
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, c_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q * scale, n_new))
+    hx = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]           # (B,H,hd)
+    hx = hx.reshape(x.shape[0], 1, cfg.d_inner)
+    var = jnp.mean(jnp.square(hx), axis=-1, keepdims=True)
+    hx = (hx * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["out_norm"])).astype(x.dtype)
+    out = (hx * jax.nn.silu(z)) @ params["down_proj"]
+    return out, MLSTMCache(conv=window[:, 1:], c=c_new, n=n_new, m=m_new)
+
+
+# -- sLSTM ---------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    d, di = cfg.d_model, cfg.d_inner
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_z": dense_init(ks[0], (d, di), dtype=dtype),
+        "w_i": dense_init(ks[1], (d, di), dtype=jnp.float32),
+        "w_f": dense_init(ks[2], (d, di), dtype=jnp.float32),
+        "b_f": jnp.full((di,), 3.0, jnp.float32),
+        "w_o": dense_init(ks[3], (d, di), dtype=dtype),
+        "down_proj": dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def slstm_apply(params: Dict, cfg: XLSTMConfig, x: jax.Array,
+                state=None) -> jax.Array:
+    """Scalar-memory LSTM with exponential gating, scanned over S."""
+    b, s, d = x.shape
+    di = cfg.d_inner
+    z = jnp.tanh(x @ params["w_z"]).astype(jnp.float32)
+    li = (x.astype(jnp.float32) @ params["w_i"])
+    lf = jax.nn.log_sigmoid(x.astype(jnp.float32) @ params["w_f"] + params["b_f"])
+    o = jax.nn.sigmoid((x @ params["w_o"]).astype(jnp.float32))
+    if state is None:
+        c0 = jnp.zeros((b, di), jnp.float32)
+        n0 = jnp.zeros((b, di), jnp.float32)
+        m0 = jnp.full((b, di), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, xs):
+        c, n, m = carry
+        zt, lit, lft, ot = xs
+        m_new = jnp.maximum(lft + m, lit)
+        i_s = jnp.exp(lit - m_new)
+        f_s = jnp.exp(lft + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new), h
+
+    xs = tuple(t.transpose(1, 0, 2) for t in (z, li, lf, o))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    return h @ params["down_proj"]
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+def slstm_init_cache(cfg: XLSTMConfig, batch: int) -> SLSTMCache:
+    di = cfg.d_inner
+    return SLSTMCache(jnp.zeros((batch, di), jnp.float32),
+                      jnp.zeros((batch, di), jnp.float32),
+                      jnp.full((batch, di), -1e30, jnp.float32))
+
+
+def slstm_decode_step(params: Dict, cfg: XLSTMConfig, x: jax.Array,
+                      cache: SLSTMCache) -> Tuple[jax.Array, SLSTMCache]:
+    xt = x[:, 0]
+    z = jnp.tanh(xt @ params["w_z"]).astype(jnp.float32)
+    li = xt.astype(jnp.float32) @ params["w_i"]
+    lf = jax.nn.log_sigmoid(xt.astype(jnp.float32) @ params["w_f"] + params["b_f"])
+    o = jax.nn.sigmoid((xt @ params["w_o"]).astype(jnp.float32))
+    m_new = jnp.maximum(lf + cache.m, li)
+    i_s = jnp.exp(li - m_new)
+    f_s = jnp.exp(lf + cache.m - m_new)
+    c_new = f_s * cache.c + i_s * z
+    n_new = f_s * cache.n + i_s
+    h = (o * c_new / jnp.maximum(n_new, 1e-6)).astype(x.dtype)
+    out = (h @ params["down_proj"])[:, None, :]
+    return out, SLSTMCache(c_new, n_new, m_new)

@@ -1,0 +1,118 @@
+"""Tests for the perf-analysis tooling: trip-count-scaled HLO analysis,
+the exchange post-pass, and roofline derivation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import symbolic_dims
+from repro.core.ir import trace_to_graph
+from repro.core.scheduling import schedule_graph, simulate_peak
+from repro.core.scheduling.exchange import exchange_pass
+from repro.core.symbolic import ShapeGraph
+from repro.launch.hlo_analysis import HLOAnalyzer, _shape_nbytes
+
+
+class TestHLOAnalysis:
+    def test_shape_bytes(self):
+        assert _shape_nbytes("f32[2,3]{1,0}") == 24
+        assert _shape_nbytes("bf16[128]") == 256
+        assert _shape_nbytes("(f32[2], s32[4])") == 8 + 16
+        assert _shape_nbytes("pred[8]") == 8
+
+    def test_scan_trip_scaling(self):
+        """A scanned matmul's flops must be counted x trips."""
+        w = jnp.ones((64, 64), jnp.float32)
+
+        def f(x):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=17)
+            return y
+
+        compiled = jax.jit(f).lower(jnp.ones((64, 64), jnp.float32)).compile()
+        res = HLOAnalyzer(compiled.as_text()).analyze()
+        expect = 2 * 64 * 64 * 64 * 17
+        assert res["flops"] >= expect * 0.9, (res["flops"], expect)
+        assert res["flops"] <= expect * 1.5
+
+    def test_nested_scan_scaling(self):
+        w = jnp.ones((32, 32), jnp.float32)
+
+        def f(x):
+            def inner(c, _):
+                return c @ w, None
+
+            def outer(c, _):
+                y, _ = jax.lax.scan(inner, c, None, length=5)
+                return y, None
+            y, _ = jax.lax.scan(outer, x, None, length=3)
+            return y
+
+        compiled = jax.jit(f).lower(jnp.ones((32, 32), jnp.float32)).compile()
+        res = HLOAnalyzer(compiled.as_text()).analyze()
+        expect = 2 * 32 ** 3 * 15
+        assert res["flops"] >= expect * 0.9
+        assert res["flops"] <= expect * 1.5
+
+    def test_no_warnings_on_model_graph(self):
+        """Trip counts must resolve for real scanned models."""
+        def f(x):
+            def body(c, _):
+                return jnp.tanh(c) * 1.01, None
+            y, _ = jax.lax.scan(body, x, None, length=9)
+            return y.sum()
+
+        compiled = jax.jit(f).lower(jnp.ones((128,), jnp.float32)).compile()
+        an = HLOAnalyzer(compiled.as_text())
+        an.analyze()
+        assert not an.warnings
+
+
+class TestExchangePass:
+    def test_preserves_validity_and_never_regresses(self):
+        B, S = symbolic_dims("b, s")
+
+        def fn(w1, w2, x):
+            a = jax.nn.relu(x @ w1)
+            b = jax.nn.relu(x @ w2)
+            return (a.sum(-1) * b.sum(-1)).sum()
+
+        g, _ = trace_to_graph(
+            jax.grad(fn, argnums=(0, 1)),
+            jax.ShapeDtypeStruct((64, 512), jnp.float32),
+            jax.ShapeDtypeStruct((64, 512), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, 64), jnp.float32))
+        res = schedule_graph(g, ShapeGraph())
+        envs = [{"b": 2, "s": 32}, {"b": 8, "s": 128}]
+        refined = exchange_pass(g, res.order, envs)
+        g.validate_order(refined)  # raises on violation
+        for env in envs + [{"b": 5, "s": 77}]:
+            before = simulate_peak(g, res.order, env).peak_bytes
+            after = simulate_peak(g, refined, env).peak_bytes
+            assert after <= before
+
+
+class TestRooflineDerivation:
+    def test_model_flops(self):
+        from benchmarks.roofline import model_flops
+        mf = model_flops("granite_8b", "train_4k")
+        # 6 * ~8e9 * 1.05e6 tokens
+        assert 4e16 < mf < 7e16, mf
+        dec = model_flops("granite_8b", "decode_32k")
+        assert dec < mf / 1e4
+
+    def test_analyze_record_terms(self):
+        from benchmarks.roofline import analyze_record
+        rec = {
+            "status": "ok", "arch": "granite_8b", "shape": "train_4k",
+            "mesh": "16x16",
+            "scaled": {"flops": 1.97e14, "hbm_bytes": 8.19e11,
+                       "collective_bytes": 5e10},
+            "memory": {"total_per_device_bytes": 8 << 30},
+        }
+        row = analyze_record(rec)
+        assert abs(row["compute_s"] - 1.0) < 1e-6
+        assert abs(row["memory_s"] - 1.0) < 1e-6
+        assert abs(row["collective_s"] - 1.0) < 1e-6
+        assert row["fits_hbm"] is True

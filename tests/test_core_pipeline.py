@@ -1,0 +1,210 @@
+"""IR tracing, scheduling, remat search, and the runtime interpreter."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import optimize, symbolic_dims
+from repro.core.executor.memory import MemoryLimitExceeded
+from repro.core.ir import solve_env, trace_to_graph
+from repro.core.remat.search import RecomputeSearcher
+from repro.core.scheduling import schedule_graph, simulate_peak
+from repro.core.symbolic import Cmp, ShapeGraph, SymbolicExpr
+
+
+B, S = symbolic_dims("b, s")
+V, D, F = 300, 32, 64
+
+
+def loss_fn(params, tokens, labels):
+    emb = params["emb"][tokens]
+    h = jax.nn.gelu(emb @ params["w1"])
+    h2 = h @ params["w2"]
+    logits = h2 @ params["emb"].T
+    logp = jax.nn.log_softmax(logits)
+    oh = jax.nn.one_hot(labels, logits.shape[-1])
+    return -(oh * logp).sum() / (1.0 * tokens.shape[0] * tokens.shape[1])
+
+
+def train_step(params, tokens, labels):
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+    return loss, jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+
+
+def specs():
+    p = {"emb": jax.ShapeDtypeStruct((V, D), jnp.float32),
+         "w1": jax.ShapeDtypeStruct((D, F), jnp.float32),
+         "w2": jax.ShapeDtypeStruct((F, D), jnp.float32)}
+    t = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return p, t, t
+
+
+def concrete_params(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"emb": jnp.asarray(rng.randn(V, D), jnp.float32),
+            "w1": jnp.asarray(rng.randn(D, F) * 0.05, jnp.float32),
+            "w2": jnp.asarray(rng.randn(F, D) * 0.05, jnp.float32)}
+
+
+class TestTracing:
+    def test_graph_wellformed(self):
+        g, _ = trace_to_graph(train_step, *specs())
+        g.validate_order(g.nodes)
+        assert g.free_symbols() == frozenset({"b", "s"})
+        assert len(g.nodes) > 30
+
+    def test_solve_env(self):
+        g, _ = trace_to_graph(train_step, *specs())
+        flat = [np.zeros((V, D), np.float32), np.zeros((D, F), np.float32),
+                np.zeros((F, D), np.float32), np.zeros((3, 17), np.int32),
+                np.zeros((3, 17), np.int32)]
+        assert solve_env(g, flat) == {"b": 3, "s": 17}
+
+    def test_solve_env_inconsistent(self):
+        g, _ = trace_to_graph(train_step, *specs())
+        flat = [np.zeros((V, D), np.float32), np.zeros((D, F), np.float32),
+                np.zeros((F, D), np.float32), np.zeros((3, 17), np.int32),
+                np.zeros((4, 17), np.int32)]
+        with pytest.raises(AssertionError):
+            solve_env(g, flat)
+
+
+class TestScheduler:
+    def test_valid_topo_order(self):
+        g, _ = trace_to_graph(train_step, *specs())
+        res = schedule_graph(g, ShapeGraph())
+        g.validate_order(res.order)  # raises on violation
+
+    def test_symbolic_decisions_dominate(self):
+        g, _ = trace_to_graph(train_step, *specs())
+        res = schedule_graph(g, ShapeGraph())
+        assert res.decision_symbolic_fraction > 0.3
+
+    def test_memsim_consistent_across_envs(self):
+        g, _ = trace_to_graph(train_step, *specs())
+        res = schedule_graph(g, ShapeGraph())
+        for env in ({"b": 2, "s": 16}, {"b": 8, "s": 200}):
+            tl = simulate_peak(g, res.order, env)
+            assert tl.peak_bytes > tl.base_bytes > 0
+
+
+class TestRematSearch:
+    def test_paper_listing1_impacts(self):
+        """Reproduce the paper's §2.3 walkthrough: for %4 = reduce(dot(
+        reshape(arg0), arg1)), subgraph impacts are -11007·S1, -11·S1,
+        +1·S1 and the full subgraph is chosen."""
+        s1, = symbolic_dims("s1")
+
+        def fn(arg0, arg1):
+            x2 = arg0.reshape(-1, 12)            # (S1, 12)
+            x3 = x2 @ arg1                        # (S1, 11008)
+            x4 = x3.sum(axis=1)                   # (S1,)
+            return (x4 * 2.0, x4 + 1.0)           # two later consumers
+
+        a0 = jax.ShapeDtypeStruct((12 * s1,), jnp.float32)  # @S0 = 12*@S1
+        a1 = jax.ShapeDtypeStruct((12, 11008), jnp.float32)
+        g, _ = trace_to_graph(fn, a0, a1)
+        sg = ShapeGraph()
+        searcher = RecomputeSearcher(g, sg)
+        # find the reduce node's output (%4)
+        red = [n for n in g.nodes if n.prim_name == "reduce_sum"][0]
+        target = red.outvals[0]
+        plan = searcher.search(target)
+        assert plan is not None, "beneficial recompute subgraph must be found"
+        # paper walkthrough: impact = +1*S1 elements (+4*S1 bytes for f32)
+        assert sg.compare(plan.impact, 0) is Cmp.GT
+        assert plan.impact == 4 * SymbolicExpr.var("s1")
+        # the chosen subgraph includes reshape+dot+reduce (3 nodes)
+        assert len(plan.node_ids) == 3
+
+    def test_candidates_found(self):
+        g, _ = trace_to_graph(train_step, *specs())
+        res = schedule_graph(g, ShapeGraph())
+        cands = RecomputeSearcher(g, ShapeGraph()).explore(res.order)
+        assert len(cands) > 10
+        assert any(c.recompute is not None for c in cands.values())
+
+
+class TestInterpreterEndToEnd:
+    def test_numerics_multiple_shapes(self):
+        opt = optimize(train_step, *specs())
+        params = concrete_params()
+        rng = np.random.RandomState(1)
+        for (b, s) in [(2, 9), (5, 33), (1, 64)]:
+            t = jnp.asarray(rng.randint(0, V, (b, s)), jnp.int32)
+            l = jnp.asarray(rng.randint(0, V, (b, s)), jnp.int32)
+            loss1, p1 = opt(params, t, l)
+            loss2, p2 = train_step(params, t, l)
+            assert np.allclose(loss1, loss2, rtol=1e-5)
+            for k in params:
+                assert np.allclose(p1[k], p2[k], rtol=1e-4, atol=1e-6)
+
+    def test_memory_limit_respected_with_identical_numerics(self):
+        opt = optimize(train_step, *specs())
+        params = concrete_params()
+        rng = np.random.RandomState(2)
+        t = jnp.asarray(rng.randint(0, V, (6, 50)), jnp.int32)
+        l = jnp.asarray(rng.randint(0, V, (6, 50)), jnp.int32)
+        opt(params, t, l)
+        free_peak = opt.last_report.stats.device_peak
+        ref_loss, ref_p = train_step(params, t, l)
+        for frac in (0.8, 0.65, 0.55):
+            limited = opt.with_memory_limit(int(free_peak * frac))
+            loss, p = limited(params, t, l)
+            st_ = limited.last_report.stats
+            assert st_.device_peak <= int(free_peak * frac)
+            assert st_.evictions > 0
+            assert np.allclose(loss, ref_loss, rtol=1e-5)
+            for k in params:
+                assert np.allclose(p[k], ref_p[k], rtol=1e-4, atol=1e-6)
+
+    def test_impossible_limit_raises(self):
+        opt = optimize(train_step, *specs(), memory_limit=1000)
+        params = concrete_params()
+        t = jnp.zeros((2, 8), jnp.int32)
+        with pytest.raises(MemoryLimitExceeded):
+            opt(params, t, t)
+
+    def test_offload_path_used_when_recompute_disabled(self):
+        """With recompute plans disabled, eviction falls back to host
+        offload (reload is always available — paper §2.3)."""
+        opt = optimize(train_step, *specs(), max_subgraph=1)
+        params = concrete_params()
+        rng = np.random.RandomState(3)
+        t = jnp.asarray(rng.randint(0, V, (6, 50)), jnp.int32)
+        opt(params, t, t)
+        peak = opt.last_report.stats.device_peak
+        limited = opt.with_memory_limit(int(peak * 0.6))
+        loss, _ = limited(params, t, t)
+        st_ = limited.last_report.stats
+        assert st_.offloads > 0 and st_.reloads > 0
+        ref, _ = train_step(params, t, t)
+        assert np.allclose(loss, ref, rtol=1e-5)
+
+    def test_scheduling_flag_off(self):
+        opt = optimize(train_step, *specs(), enable_scheduling=False,
+                       enable_remat=False)
+        params = concrete_params()
+        t = jnp.zeros((2, 8), jnp.int32)
+        loss, _ = opt(params, t, t)
+        ref, _ = train_step(params, t, t)
+        assert np.allclose(loss, ref, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(4, 48))
+def test_property_any_shape_one_trace(b, s):
+    """One symbolic trace serves every concrete shape (no retrace)."""
+    opt = test_property_any_shape_one_trace._opt
+    params = test_property_any_shape_one_trace._params
+    rng = np.random.RandomState(b * 100 + s)
+    t = jnp.asarray(rng.randint(0, V, (b, s)), jnp.int32)
+    l = jnp.asarray(rng.randint(0, V, (b, s)), jnp.int32)
+    loss1, _ = opt(params, t, l)
+    loss2, _ = train_step(params, t, l)
+    assert np.allclose(loss1, loss2, rtol=1e-5)
+
+
+test_property_any_shape_one_trace._opt = optimize(train_step, *specs())
+test_property_any_shape_one_trace._params = concrete_params()

@@ -1,0 +1,91 @@
+"""Compressed-gradient train step + remat-policy export."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import optimize, symbolic_dims
+from repro.core.remat.export import recommend_policy
+from repro.distributed import init_compression_state
+from repro.launch.steps import adamw_config_for, make_train_step
+from repro.models import init_params
+from repro.optim import init_state
+
+CFG = get_smoke_config("llama2_1b")
+
+
+def _batch(b=2, s=24, seed=0):
+    rng = np.random.RandomState(seed)
+    t = jnp.asarray(rng.randint(0, CFG.vocab, (b, s)), jnp.int32)
+    return {"tokens": t, "labels": t, "mask": jnp.ones((b, s), jnp.float32)}
+
+
+class TestCompressedTrainStep:
+    def test_compressed_step_close_to_exact(self):
+        params = init_params(CFG, jax.random.PRNGKey(0))
+        opt = init_state(params, adamw_config_for(CFG))
+        plain = jax.jit(make_train_step(CFG))
+        comp = jax.jit(make_train_step(CFG, compress=True))
+        grads_like = params
+        cstate = init_compression_state(grads_like)
+        batch = _batch()
+        l1, p1, _ = plain(params, opt, batch)
+        l2, p2, _, cstate = comp(params, opt, cstate, batch)
+        assert np.allclose(float(l1), float(l2), rtol=1e-5)  # loss pre-update
+        # int8-compressed update stays close to the exact one.  AdamW's
+        # first step is ~sign(g)*lr, so a quantization-perturbed gradient
+        # can flip near-zero entries by at most ~2*lr.
+        lr = adamw_config_for(CFG).lr
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            diff = float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                         - b.astype(jnp.float32))))
+            assert diff <= 3 * lr, diff
+
+    def test_error_feedback_carries_across_steps(self):
+        params = init_params(CFG, jax.random.PRNGKey(0))
+        opt = init_state(params, adamw_config_for(CFG))
+        comp = jax.jit(make_train_step(CFG, compress=True))
+        cstate = init_compression_state(params)
+        e0 = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(cstate.error))
+        assert e0 == 0.0
+        _, params, opt, cstate = comp(params, opt, cstate, _batch(seed=1))
+        e1 = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(cstate.error))
+        assert e1 > 0.0  # residual accumulated
+
+    def test_grad_accum_matches_full_batch(self):
+        params = init_params(CFG, jax.random.PRNGKey(0))
+        opt = init_state(params, adamw_config_for(CFG))
+        full = jax.jit(make_train_step(CFG))
+        accum = jax.jit(make_train_step(CFG, grad_accum=2))
+        batch = _batch(b=4, s=24)
+        l1, p1, _ = full(params, opt, batch)
+        l2, p2, _ = accum(params, opt, batch)
+        assert np.allclose(float(l1), float(l2), rtol=1e-4)
+        lr = adamw_config_for(CFG).lr
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            diff = np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))
+            # summation-order noise can flip sign(g)*lr on near-zero grads
+            assert float(diff.max()) <= 3 * lr, float(diff.max())
+            assert float(diff.mean()) <= lr / 2
+
+
+class TestRematPolicyExport:
+    def test_recommendation_fields(self):
+        cfg = dataclasses.replace(CFG, scan_layers=False)
+        step = make_train_step(cfg)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_state(params, adamw_config_for(cfg))
+        B, S = symbolic_dims("b, s")
+        p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        o = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt)
+        bs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+              "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+              "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        fn = optimize(step, p, o, bs)
+        rec = recommend_policy(fn.plan, {"b": 8, "s": 64})
+        assert rec.policy_name in ("block", "dots_saveable", "none")
+        assert 0.0 <= rec.recompute_flop_fraction <= 1.5
+        assert 0.0 <= rec.recomputable_byte_fraction <= 1.0
+        assert rec.rationale

@@ -1,0 +1,194 @@
+"""Per-architecture smoke tests + decode parity + mixer-math validation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn)
+from repro.models.attention import blockwise_attention, dense_attention
+from repro.models.ssm import (SSMConfig, ssm_apply, ssm_decode_step,
+                              ssm_init, ssm_init_cache)
+from repro.models.xlstm import (XLSTMConfig, mlstm_apply, mlstm_chunkwise,
+                                mlstm_decode_step, mlstm_init,
+                                mlstm_init_cache)
+
+RNG = np.random.RandomState(0)
+
+
+def make_batch(cfg, b=2, s=16):
+    if cfg.input_mode == "tokens":
+        return {"tokens": jnp.asarray(RNG.randint(0, cfg.vocab, (b, s))),
+                "labels": jnp.asarray(RNG.randint(0, cfg.vocab, (b, s)))}
+    if cfg.input_mode == "embeddings":
+        return {"frame_embed": jnp.asarray(RNG.randn(b, s, cfg.d_model),
+                                           jnp.float32),
+                "labels": jnp.asarray(
+                    RNG.randint(0, cfg.vocab, (b, s, cfg.n_codebooks)))}
+    return {"vis_embed": jnp.asarray(RNG.randn(b, cfg.vis_tokens, cfg.d_model),
+                                     jnp.float32),
+            "tokens": jnp.asarray(RNG.randint(0, cfg.vocab, (b, s))),
+            "labels": jnp.asarray(RNG.randint(0, cfg.vocab, (b, s)))}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_backward(arch):
+    """Reduced config: one train step on CPU, shapes + finiteness."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits, _aux = forward(cfg, params, batch)
+    vp = cfg.padded_vocab  # embedding tables pad to a tile boundary
+    if cfg.n_codebooks:
+        assert logits.shape == (2, 16, cfg.n_codebooks, vp)
+    elif cfg.input_mode == "vlm":
+        assert logits.shape == (2, cfg.vis_tokens + 16, vp)
+    else:
+        assert logits.shape == (2, 16, vp)
+    assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    gsum = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gsum) and gsum > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full (non-smoke) config must carry the assigned numbers."""
+    cfg = get_config(arch)
+    expected = {
+        "hymba_1p5b": (32, 1600, 25, 5, 5504, 32001),
+        "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+        "musicgen_medium": (48, 1536, 24, 24, 6144, 2048),
+        "starcoder2_7b": (32, 4608, 36, 4, 18432, 49152),
+        "granite_8b": (36, 4096, 32, 8, 14336, 49152),
+        "gemma_7b": (28, 3072, 16, 16, 24576, 256000),
+        "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+        "deepseek_v3_671b": (61, 7168, 128, 128, 2048, 129280),
+        "kimi_k2_1t_a32b": (61, 7168, 64, 8, 2048, 163840),
+        "xlstm_1p3b": (48, 2048, 4, 4, 0, 50304),
+        "llama2_1b": (4, 4096, 32, 32, 11008, 32000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Token-by-token decode with caches == full-sequence forward."""
+    cfg = get_smoke_config(arch)
+    if cfg.n_experts:  # no-drop capacity for exact parity (drops are policy)
+        cfg = dataclasses.replace(cfg, moe_capacity=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, S = 2, 12
+    if cfg.input_mode == "embeddings":
+        fe = jnp.asarray(RNG.randn(b, S, cfg.d_model), jnp.float32)
+        batch = {"frame_embed": fe}
+    else:
+        toks = jnp.asarray(RNG.randint(0, cfg.vocab, (b, S)))
+        batch = ({"vis_embed": jnp.zeros((b, 0, cfg.d_model), jnp.float32),
+                  "tokens": toks} if cfg.input_mode == "vlm"
+                 else {"tokens": toks})
+    full, _ = forward(cfg, params, batch)
+    state = init_cache(cfg, b, max_len=S + 4)
+    outs = []
+    for t in range(S):
+        inp = ({"frame_embed": fe[:, t:t + 1]}
+               if cfg.input_mode == "embeddings"
+               else {"token": toks[:, t:t + 1]})
+        lg, state = decode_step(cfg, params, state, inp)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(dec - full.astype(dec.dtype)))) / \
+        max(float(jnp.max(jnp.abs(full))), 1e-6)
+    assert rel < 2e-2, f"decode/forward mismatch rel={rel}"
+
+
+class TestAttention:
+    @pytest.mark.parametrize("hq,hkv,window", [(4, 2, None), (4, 4, None),
+                                               (8, 1, None), (6, 2, 24)])
+    def test_blockwise_matches_dense(self, hq, hkv, window):
+        q = jnp.asarray(RNG.randn(2, 96, hq, 16), jnp.float32)
+        k = jnp.asarray(RNG.randn(2, 96, hkv, 16), jnp.float32)
+        v = jnp.asarray(RNG.randn(2, 96, hkv, 16), jnp.float32)
+        o1 = dense_attention(q, k, v, causal=True, window=window)
+        o2 = blockwise_attention(q, k, v, causal=True, window=window,
+                                 block_kv=32)
+        assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-4
+
+    def test_blockwise_grads_match_dense(self):
+        q = jnp.asarray(RNG.randn(2, 64, 4, 16), jnp.float32)
+        k = jnp.asarray(RNG.randn(2, 64, 2, 16), jnp.float32)
+        v = jnp.asarray(RNG.randn(2, 64, 2, 16), jnp.float32)
+        g1 = jax.grad(lambda *a: (dense_attention(*a, causal=True) ** 2).sum(),
+                      (0, 1, 2))(q, k, v)
+        g2 = jax.grad(lambda *a: (blockwise_attention(*a, causal=True,
+                                                      block_kv=16) ** 2).sum(),
+                      (0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+
+    def test_non_divisible_seq_padding(self):
+        q = jnp.asarray(RNG.randn(1, 50, 2, 8), jnp.float32)
+        k = jnp.asarray(RNG.randn(1, 50, 2, 8), jnp.float32)
+        v = jnp.asarray(RNG.randn(1, 50, 2, 8), jnp.float32)
+        o1 = dense_attention(q, k, v, causal=True)
+        o2 = blockwise_attention(q, k, v, causal=True, block_kv=16)
+        assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-4
+
+
+class TestSSM:
+    def test_chunked_scan_matches_stepwise(self):
+        """Chunkwise selective scan == step-by-step recurrence."""
+        cfg = SSMConfig(d_model=24, d_inner=48, d_state=4, chunk=8)
+        params = ssm_init(jax.random.PRNGKey(0), cfg)
+        x = jnp.asarray(RNG.randn(2, 37, 24), jnp.float32) * 0.3
+        y_full = ssm_apply(params, cfg, x)
+        cache = ssm_init_cache(cfg, 2)
+        ys = []
+        for t in range(37):
+            y, cache = ssm_decode_step(params, cfg, x[:, t:t + 1], cache)
+            ys.append(y[:, 0])
+        y_step = jnp.stack(ys, axis=1)
+        err = float(jnp.max(jnp.abs(y_full - y_step)))
+        assert err < 1e-4, err
+
+
+class TestMLSTM:
+    def test_chunkwise_matches_recurrent(self):
+        cfg = XLSTMConfig(d_model=16, n_heads=2, proj_factor=2.0, chunk=8)
+        params = mlstm_init(jax.random.PRNGKey(0), cfg)
+        x = jnp.asarray(RNG.randn(2, 29, 16), jnp.float32) * 0.3
+        y_full = mlstm_apply(params, cfg, x)
+        cache = mlstm_init_cache(cfg, 2)
+        ys = []
+        for t in range(29):
+            y, cache = mlstm_decode_step(params, cfg, x[:, t:t + 1], cache)
+            ys.append(y[:, 0])
+        y_step = jnp.stack(ys, axis=1)
+        err = float(jnp.max(jnp.abs(y_full - y_step)))
+        assert err < 1e-3, err
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor=1, some tokens drop but output stays finite and
+    the shared expert keeps every token covered."""
+    cfg = dataclasses.replace(get_smoke_config("deepseek_v3_671b"),
+                              moe_capacity=1.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, b=2, s=32)
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+
+
+def test_param_count_sane():
+    cfg = get_config("granite_8b")
+    n = cfg.param_count()
+    assert 7.5e9 < n < 9.0e9, n
+    ds = get_config("deepseek_v3_671b")
+    assert 6.0e11 < ds.param_count() < 7.5e11, ds.param_count()
+    assert 3.0e10 < ds.param_count(active_only=True) < 5.0e10

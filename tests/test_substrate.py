@@ -1,0 +1,191 @@
+"""Data pipeline, checkpointing (incl. elastic restore), compression,
+straggler monitor, and the sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataPipeline, PipelineConfig
+from repro.distributed import (StragglerMonitor, compress_gradients,
+                               init_compression_state)
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.launch.sharding import ShardingRules
+from repro.launch.mesh import make_debug_mesh
+
+
+class TestDataPipeline:
+    def test_deterministic(self):
+        cfg = PipelineConfig(vocab=100, batch_size=4, seed=7)
+        b1 = DataPipeline(cfg).next_batch()
+        b2 = DataPipeline(cfg).next_batch()
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+
+    def test_resume_exact(self):
+        cfg = PipelineConfig(vocab=100, batch_size=4, seed=7)
+        p = DataPipeline(cfg)
+        for _ in range(5):
+            p.next_batch()
+        state = p.state()
+        want = p.next_batch()
+        q = DataPipeline(cfg)
+        q.restore(state)
+        got = q.next_batch()
+        assert np.array_equal(want["tokens"], got["tokens"])
+
+    def test_dynamic_shapes_vary(self):
+        p = DataPipeline(PipelineConfig(vocab=100, batch_size=4, seed=1))
+        shapes = {p.next_batch()["tokens"].shape[1] for _ in range(10)}
+        assert len(shapes) > 3, "dynamic batching must produce varying S"
+
+    def test_bucketed_pow2(self):
+        p = DataPipeline(PipelineConfig(vocab=100, batch_size=4, seed=1,
+                                        mode="bucketed"))
+        for _ in range(10):
+            s = p.next_batch()["tokens"].shape[1]
+            assert s & (s - 1) == 0, f"{s} not a power of two"
+
+    def test_padding_waste_ordering(self):
+        p = DataPipeline(PipelineConfig(vocab=100, batch_size=14, seed=0))
+        dyn, buck = p.padding_waste(50)
+        assert dyn < buck, "dynamic batching must waste less than bucketing"
+        assert 0 <= dyn < 0.9 and buck < 0.95
+
+    def test_epoch_rollover(self):
+        p = DataPipeline(PipelineConfig(vocab=50, batch_size=64,
+                                        n_samples=100, seed=0))
+        for _ in range(5):
+            p.next_batch()
+        assert p.state()["epoch"] >= 1
+
+
+class TestCheckpointer:
+    def test_save_restore_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        state = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                 "opt": {"m": np.ones(3), "step": np.int64(7)}}
+        ck.save(10, state, extra={"data_cursor": 42})
+        step, got, extra = ck.restore()
+        assert step == 10 and extra["data_cursor"] == 42
+        assert np.array_equal(got["w"], state["w"])
+        assert np.array_equal(got["opt"]["m"], state["opt"]["m"])
+
+    def test_keep_n_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, {"x": np.zeros(2)})
+        assert ck.all_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=3)
+        ck.save(5, {"x": np.arange(5)}, blocking=False)
+        ck.wait()
+        assert ck.latest_step() == 5
+
+    def test_elastic_restore_new_mesh(self, tmp_path):
+        """Checkpoint saved unsharded restores onto a different mesh."""
+        ck = Checkpointer(str(tmp_path))
+        w = np.arange(64, dtype=np.float32).reshape(8, 8)
+        ck.save(1, {"w": w})
+        mesh = make_debug_mesh(1, 1)  # the "new" cluster
+        rules = ShardingRules(mesh)
+        shard = rules.named(rules.params_pspecs(
+            {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}))
+        _, got, _ = ck.restore(shardings=shard)
+        assert np.array_equal(np.asarray(got["w"]), w)
+        assert isinstance(got["w"], jax.Array)
+
+    def test_atomic_no_partial_on_existing(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, {"x": np.ones(3)})
+        ck.save(1, {"x": np.zeros(3)})  # overwrite same step atomically
+        _, got, _ = ck.restore(1)
+        assert np.array_equal(got["x"], np.zeros(3))
+
+
+class TestCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.randn(1000), jnp.float32)
+        q, s = quantize_int8(x)
+        y = dequantize_int8(q, s, x.shape, jnp.float32)
+        # error bounded by scale/2 per block
+        assert float(jnp.max(jnp.abs(x - y))) <= float(jnp.max(s)) * 0.51
+
+    def test_error_feedback_unbiased_over_steps(self):
+        """With error feedback, the accumulated compressed sum converges to
+        the true gradient sum (bias is absorbed by the residual)."""
+        rng = np.random.RandomState(1)
+        g_true = jnp.asarray(rng.randn(512), jnp.float32) * 0.1
+        grads = {"w": g_true}
+        state = init_compression_state(grads)
+        acc = jnp.zeros(512)
+        n = 50
+        for _ in range(n):
+            g_hat, state = compress_gradients(grads, state)
+            acc = acc + g_hat["w"]
+        err = float(jnp.max(jnp.abs(acc / n - g_true)))
+        assert err < 2e-3, err
+
+    def test_compression_ratio(self):
+        # int8 + fp32 scale per 256 block = ~4x fewer bytes than fp32
+        x = jnp.zeros(4096, jnp.float32)
+        q, s = quantize_int8(x)
+        bytes_q = q.size * 1 + s.size * 4
+        assert bytes_q * 3.5 < x.size * 4
+
+
+class TestStraggler:
+    def test_flags_persistent_straggler(self):
+        mon = StragglerMonitor()
+        flagged = []
+        for step in range(30):
+            times = {h: 1.0 + 0.01 * np.random.RandomState(step * 10 + h).rand()
+                     for h in range(8)}
+            if step > 10:
+                times[3] = 2.5  # host 3 goes slow
+            flagged += mon.record_step(times)
+        assert 3 in flagged
+        assert mon.healthy_hosts(list(range(8))) == [0, 1, 2, 4, 5, 6, 7]
+
+    def test_no_false_positives(self):
+        mon = StragglerMonitor()
+        for step in range(30):
+            times = {h: 1.0 + 0.02 * np.random.RandomState(step * 10 + h).rand()
+                     for h in range(8)}
+            assert mon.record_step(times) == []
+
+
+class TestShardingRules:
+    def test_divisible_dims_sharded(self):
+        mesh = make_debug_mesh(1, 1)
+        rules = ShardingRules(mesh)
+        # rules are mesh-size aware; with 16-way axes these shapes shard
+        from repro.launch.mesh import make_production_mesh  # noqa
+        spec = rules.spec_for("layers/ffn/w1", (18, 2048, 16384))
+        assert spec[0] is None  # stacked layer dim never sharded
+
+    def test_nondivisible_falls_back(self):
+        import os
+        # fake a 16x16 mesh via rule object internals
+        mesh = make_debug_mesh(1, 1)
+        rules = ShardingRules(mesh)
+        rules.model, rules.data = 16, 16
+        spec = rules.spec_for("layers/attn/wq", (4608, 36 * 128))
+        # 4608 % 16 == 0 -> data; 4608 cols % 16 == 0 -> model
+        assert spec == jax.sharding.PartitionSpec("data", "model")
+        spec2 = rules.spec_for("x/embed", (32001, 1600))
+        assert spec2[0] is None  # 32001 % 16 != 0 -> replicated + recorded
+        assert any("32001" in v for v in rules.fallbacks.values())
+
+    def test_moe_expert_sharding(self):
+        mesh = make_debug_mesh(1, 1)
+        rules = ShardingRules(mesh)
+        rules.model, rules.data = 16, 16
+        spec = rules.spec_for("layers/moe/w1", (61, 256, 7168, 2048))
+        assert spec == jax.sharding.PartitionSpec(None, "model", "data", None)
+        dense = rules.spec_for("layers/ffn/w1", (61, 7168, 2048))
+        assert dense == jax.sharding.PartitionSpec(None, "data", None) or \
+            dense == jax.sharding.PartitionSpec(None, "data", "model")

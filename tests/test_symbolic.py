@@ -1,0 +1,147 @@
+"""Unit + property tests for the symbolic shape system (paper §2.1)."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import export
+
+from repro.core.symbolic import (Cmp, ShapeGraph, SymbolicExpr, dim_to_expr,
+                                 size_of)
+
+
+def V(n):
+    return SymbolicExpr.var(n)
+
+
+class TestExprAlgebra:
+    def test_constants(self):
+        assert SymbolicExpr.constant(3) + 4 == SymbolicExpr.constant(7)
+        assert SymbolicExpr.constant(3) * 4 == SymbolicExpr.constant(12)
+        assert (SymbolicExpr.constant(3) - 3).constant_value() == 0
+
+    def test_polynomial_identity(self):
+        a, b = V("a"), V("b")
+        assert (a + b) * (a - b) == a * a - b * b
+
+    def test_evaluate(self):
+        a, b = V("a"), V("b")
+        e = 3 * a * a * b - 2 * b + 7
+        assert e.evaluate({"a": 5, "b": 2}) == 3 * 25 * 2 - 4 + 7
+
+    def test_floordiv_exact_stays_polynomial(self):
+        a = V("a")
+        assert (12 * a).floordiv(4) == 3 * a
+
+    def test_floordiv_opaque_evaluates(self):
+        a = V("a")
+        e = (a + 1).floordiv(2)
+        assert e.evaluate({"a": 5}) == 3
+        assert e.evaluate({"a": 4}) == 2
+
+    def test_mod(self):
+        a = V("a")
+        assert (8 * a).mod(4).constant_value() == 0
+        assert (a + 1).mod(3).evaluate({"a": 4}) == 2
+
+    def test_max_min(self):
+        a = V("a")
+        assert SymbolicExpr.max_of(a, a) == a
+        assert SymbolicExpr.max_of(3, 5).constant_value() == 5
+        e = SymbolicExpr.min_of(a, 10)
+        assert e.evaluate({"a": 3}) == 3
+        assert e.evaluate({"a": 30}) == 10
+
+    def test_size_of(self):
+        a, b = V("a"), V("b")
+        assert size_of((a, 4, b)) == 4 * a * b
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 50), st.integers(1, 50), st.integers(-20, 20),
+       st.integers(-20, 20))
+def test_property_eval_homomorphism(x, y, c1, c2):
+    a, b = V("a"), V("b")
+    e1 = c1 * a * b + c2 * b
+    e2 = c2 * a - c1
+    env = {"a": x, "b": y}
+    assert (e1 + e2).evaluate(env) == e1.evaluate(env) + e2.evaluate(env)
+    assert (e1 * e2).evaluate(env) == e1.evaluate(env) * e2.evaluate(env)
+    assert (e1 - e2).evaluate(env) == e1.evaluate(env) - e2.evaluate(env)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 1000), st.integers(1, 1000))
+def test_property_compare_soundness(x, y):
+    """If the shape graph claims an order, concrete evaluation agrees."""
+    g = ShapeGraph()
+    a, b = V("a"), V("b")
+    e1 = 3 * a + 2 * b
+    e2 = 2 * a + 2 * b + 5
+    c = g.compare(e1, e2)
+    env = {"a": x, "b": y}
+    v1, v2 = e1.evaluate(env), e2.evaluate(env)
+    if c is Cmp.LT:
+        assert v1 < v2
+    elif c is Cmp.GT:
+        assert v1 > v2
+    elif c in (Cmp.LE,):
+        assert v1 <= v2
+    elif c in (Cmp.GE,):
+        assert v1 >= v2
+
+
+class TestShapeGraph:
+    def test_paper_listing1(self):
+        """@S0 = 12*@S1; 11008*@S1 < 1024*@S0 (paper §2.1 example)."""
+        g = ShapeGraph()
+        g.add_equality("S0", 12 * V("S1"))
+        expr1 = 11008 * V("S1")
+        expr2 = 1024 * V("S0")
+        assert g.canonicalize(expr2) == 12288 * V("S1")
+        assert g.compare(expr1, expr2) is Cmp.LT
+
+    def test_paper_scheduling_example(self):
+        """DotOp impact 10996*S1 vs reshape impact 4096*S0 (paper §2.2)."""
+        g = ShapeGraph()
+        g.add_equality("S0", 12 * V("S1"))
+        dot_impact = 11008 * V("S1") - 12 * V("S1")
+        reshape_impact = 4096 * V("S0")
+        assert g.compare(reshape_impact, dot_impact) is Cmp.GT
+
+    def test_unknown_then_bounded(self):
+        g = ShapeGraph()
+        a, b = V("a"), V("b")
+        assert g.compare(a, b) is Cmp.UNKNOWN
+        g.set_bounds("a", hi=10)
+        g.set_bounds("b", lo=11)
+        assert g.compare(a, b) is Cmp.LT
+
+    def test_chained_equalities(self):
+        g = ShapeGraph()
+        g.add_equality("x", 2 * V("y"))
+        g.add_equality("y", 3 * V("z"))
+        assert g.canonicalize(V("x")) == 6 * V("z")
+
+    def test_default_lower_bound(self):
+        g = ShapeGraph()  # dims >= 1
+        a = V("a")
+        assert g.compare(a + 1, 1) is Cmp.GT
+        assert g.compare(a, 0) is Cmp.GT
+
+
+class TestFromJax:
+    def test_roundtrip_polynomial(self):
+        b, s = export.symbolic_shape("b, s")
+        e = dim_to_expr(12 * b + s * s - 3)
+        assert e.evaluate({"b": 4, "s": 10}) == 48 + 100 - 3
+
+    def test_floordiv_dim(self):
+        b, s = export.symbolic_shape("b, s")
+        e = dim_to_expr((b * s) // 128)
+        assert e.evaluate({"b": 4, "s": 256}) == 8
+
+    def test_exact_division_simplifies(self):
+        b, = export.symbolic_shape("b")
+        assert dim_to_expr((b * 128) // 128) == V("b")
+
+    def test_int_passthrough(self):
+        assert dim_to_expr(7).constant_value() == 7
