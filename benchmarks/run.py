@@ -32,7 +32,7 @@ def main() -> None:
         lambda: table1_dynamic_training.run(steps=steps),
         lambda rs: ";".join(
             f"{r['system']}@b{r['batch']}:"
-            f"{'OOM' if r['oom'] else f'{r['peak']/2**20:.0f}MiB'}"
+            + ("OOM" if r["oom"] else f"{r['peak']/2**20:.0f}MiB")
             for r in rs))
     print(table1_dynamic_training.format_rows(rows), file=sys.stderr)
 
@@ -47,10 +47,12 @@ def main() -> None:
                f"{int(100*r['fraction'])}%:{'ok' if r['ok'] else 'OOM'}"
                for r in rs))
 
-    # symbolic comparability across architectures
+    # symbolic comparability across architectures (plain -> bounded dims)
     _timed("symbolic_coverage", symbolic_coverage.run,
-           lambda rs: ";".join(f"{r['arch']}:{100*r['symbolic_frac']:.0f}%"
-                               for r in rs))
+           lambda rs: ";".join(
+               f"{r['arch']}:{100*r['symbolic_frac']:.0f}%"
+               f"->{100*r['symbolic_frac_bounded']:.0f}%"
+               for r in rs))
 
     # roofline readout from the dry-run artifacts (if present)
     try:

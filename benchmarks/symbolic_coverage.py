@@ -3,7 +3,14 @@
 The paper's method stands on SymbolicExpr comparability; this benchmark
 traces several architecture train steps with symbolic (batch, seq) and
 reports the fraction of ReadySet decisions resolved symbolically vs via
-the lifetime tie-break, plus remat-candidate statistics.
+the lifetime tie-break — once with *no* declared dim ranges (the seed
+behaviour) and once with bounded dynamic shapes declared
+(``1 <= batch <= 64``, ``16 <= seq <= 4096``), which lets the interval
+fallback resolve comparisons the polynomial ordering alone cannot.
+
+With ranges declared it also reports the compile-time guaranteed
+worst-case peak (``simulate_peak_bound``) and verifies that the observed
+simulated peak never exceeds it for envs inside the ranges.
 """
 from __future__ import annotations
 
@@ -17,8 +24,9 @@ from repro.configs import get_smoke_config
 from repro.core import symbolic_dims
 from repro.core.ir import trace_to_graph
 from repro.core.remat.planner import build_plan
-from repro.core.scheduling import schedule_graph
-from repro.core.symbolic import ShapeGraph
+from repro.core.scheduling import schedule_graph, simulate_peak, \
+    simulate_peak_bound
+from repro.core.symbolic import ShapeGraph, declare_dim_ranges
 from repro.launch.steps import make_train_step
 from repro.models import init_params
 from repro.optim import init_state
@@ -26,6 +34,11 @@ from repro.launch.steps import adamw_config_for
 
 
 ARCHS = ["llama2_1b", "gemma_2b", "granite_8b", "musicgen_medium"]
+
+BATCH_RANGE = (1, 64)
+SEQ_RANGE = (16, 4096)
+# envs (within the declared ranges) at which the guaranteed bound is checked
+PROBE_ENVS = [(1, 16), (8, 512), (64, 4096)]
 
 
 def run() -> List[Dict]:
@@ -35,7 +48,8 @@ def run() -> List[Dict]:
         step = make_train_step(cfg)
         params = init_params(cfg, jax.random.PRNGKey(0))
         opt_state = init_state(params, adamw_config_for(cfg))
-        B, S = symbolic_dims(f"b_{arch[:3]}, s_{arch[:3]}")
+        bname, sname = f"b_{arch[:3]}", f"s_{arch[:3]}"
+        B, S = symbolic_dims(f"{bname}, {sname}")
         p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
         o = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                          opt_state)
@@ -50,20 +64,46 @@ def run() -> List[Dict]:
         else:
             continue
         g, _ = trace_to_graph(step, p, o, batch)
-        res = schedule_graph(g, ShapeGraph())
-        plan = build_plan(g, res, ShapeGraph())
+
+        # before: polynomial comparison only (no declared ranges)
+        res_before = schedule_graph(g, ShapeGraph())
+
+        # after: bounded dynamic shapes declared
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {bname: BATCH_RANGE, sname: SEQ_RANGE})
+        res_after = schedule_graph(g, sg)
+        plan = build_plan(g, res_after, sg)
+
+        # compile-time guaranteed peak vs observed simulated peak
+        _, bound = simulate_peak_bound(g, res_after.order, sg)
+        worst_observed = 0
+        for b, s in PROBE_ENVS:
+            tl = simulate_peak(g, res_after.order, {bname: b, sname: s})
+            worst_observed = max(worst_observed, tl.peak_bytes)
+            assert bound is None or tl.peak_bytes <= bound, \
+                f"{arch}: simulated peak {tl.peak_bytes} exceeds bound {bound}"
+
         rows.append(dict(
             arch=arch, nodes=len(g.nodes),
-            symbolic_frac=res.decision_symbolic_fraction,
+            symbolic_frac=res_before.decision_symbolic_fraction,
+            symbolic_frac_bounded=res_after.decision_symbolic_fraction,
             candidates=plan.n_candidates,
             recomputable=plan.n_recomputable,
+            static_regen=plan.n_static_regen,
+            peak_bound=bound,
+            peak_observed=worst_observed,
         ))
     return rows
 
 
 if __name__ == "__main__":
     for r in run():
+        bound = "unbounded" if r["peak_bound"] is None else \
+            f"{r['peak_bound'] / 2**20:.0f}MiB"
         print(f"{r['arch']:18s} nodes={r['nodes']:5d} "
               f"symbolic-decisions={100*r['symbolic_frac']:5.1f}% "
+              f"-> bounded={100*r['symbolic_frac_bounded']:5.1f}% "
               f"remat-candidates={r['candidates']:4d} "
-              f"recomputable={r['recomputable']:4d}")
+              f"recomputable={r['recomputable']:4d} "
+              f"static-regen={r['static_regen']:4d} "
+              f"peak<= {bound} (observed {r['peak_observed'] / 2**20:.0f}MiB)")

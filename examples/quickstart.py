@@ -63,3 +63,17 @@ for frac in (0.8, 0.6, 0.45):
     print(f"  {100*frac:3.0f}% cap: peak={st.device_peak/2**20:6.2f} MiB  "
           f"evictions={st.evictions:3d} recomputes={st.recomputes:3d} "
           f"offloads={st.offloads:2d}  (numerics unchanged)")
+
+# 5. Bounded dynamic shapes: declare dim ranges to resolve more scheduling
+#    decisions symbolically and get a compile-time worst-case peak guarantee
+#    (what a static-allocation backend would size its arena with).
+opt_b = optimize(train_step, w_specs,
+                 jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+                 dynamic_dims={"b": (1, 8), "s": "<=256"})
+frac = opt_b.report.schedule.decision_symbolic_fraction
+print(f"declared 1<=b<=8, s<=256: guaranteed peak <= "
+      f"{opt_b.guaranteed_peak_bytes/2**20:.2f} MiB, "
+      f"{100*frac:.1f}% of scheduling decisions symbolic")
+x = jnp.asarray(rng.randn(8, 256, D), jnp.float32)
+opt_b(ws, x)
+assert opt_b.last_report.stats.device_peak <= opt_b.guaranteed_peak_bytes

@@ -20,9 +20,9 @@ from jax import export, tree_util
 from .executor.interpreter import PlanInterpreter, RunReport
 from .ir.trace import trace_to_graph
 from .remat.planner import ExecutionPlan, build_plan
-from .scheduling.memsim import simulate_peak
+from .scheduling.memsim import simulate_peak, simulate_peak_bound
 from .scheduling.scheduler import ScheduleResult, schedule_graph
-from .symbolic import ShapeGraph
+from .symbolic import ShapeGraph, declare_dim_ranges
 
 
 def symbolic_dim(name: str):
@@ -41,6 +41,12 @@ class OptimizeReport:
     n_candidates: int
     n_recomputable: int
     used_scheduled_order: bool
+    # candidates whose regen method interval bounds fixed at compile time
+    n_static_regen: int = 0
+    # guaranteed worst-case peak bytes over the declared dim ranges
+    # (None when some dim has no declared upper bound)
+    peak_bound_bytes: Optional[int] = None
+    peak_bound_lo: Optional[int] = None
 
 
 class DynamicShapeFunction:
@@ -69,6 +75,16 @@ class DynamicShapeFunction:
         self.last_report = report
         return tree_util.tree_unflatten(self._out_tree, outs)
 
+    @property
+    def guaranteed_peak_bytes(self) -> Optional[int]:
+        """Compile-time worst-case peak over the declared dim ranges.
+
+        ``None`` unless every symbolic dim was given an upper bound via
+        ``optimize(..., dynamic_dims=...)``.  For every call whose dims lie
+        within the declared ranges, the free-run device peak is <= this.
+        """
+        return self.report.peak_bound_bytes
+
     # reconfigure without retracing
     def with_memory_limit(self, limit: Optional[int]) -> "DynamicShapeFunction":
         return DynamicShapeFunction(self.plan, self._in_tree, self._out_tree,
@@ -82,6 +98,7 @@ def optimize(
     fn: Callable,
     *example_args,
     shape_graph: Optional[ShapeGraph] = None,
+    dynamic_dims: Optional[Dict[str, Any]] = None,
     enable_scheduling: bool = True,
     enable_remat: bool = True,
     memory_limit: Optional[int] = None,
@@ -94,12 +111,36 @@ def optimize(
     """Trace ``fn`` symbolically and build the optimized dynamic-shape plan.
 
     ``example_args``: ShapeDtypeStructs (shapes may contain symbolic dims
-    from :func:`symbolic_dim`).  ``guard_env``: representative dim binding
-    used to verify the scheduled order does not regress peak memory vs the
-    original program order (best-of safeguard); defaults to all dims = 64.
+    from :func:`symbolic_dim`).  ``dynamic_dims``: declared ranges per
+    symbolic dim name — e.g. ``{"b": (1, 64), "s": "<=4096"}`` (see
+    :func:`repro.core.symbolic.parse_range_spec`) — feeding the interval
+    fallback of symbolic comparisons; with every dim bounded above, the
+    report carries a guaranteed worst-case peak (``peak_bound_bytes``).
+    ``guard_env``: representative dim binding used to verify the scheduled
+    order does not regress peak memory vs the original program order
+    (best-of safeguard); defaults to all dims = 64, clamped into the
+    declared ranges.
     """
     graph, _ = trace_to_graph(fn, *example_args, **example_kwargs)
     sg = shape_graph if shape_graph is not None else ShapeGraph()
+    if dynamic_dims:
+        known = graph.free_symbols()
+        unknown = sorted(set(dynamic_dims) - known)
+        if unknown:
+            raise ValueError(
+                f"dynamic_dims names {unknown} are not symbolic dims of the "
+                f"traced function (known: {sorted(known)})")
+    declare_dim_ranges(sg, dynamic_dims)
+
+    def _clamp(name: str, v: int) -> int:
+        iv = sg.declared_ranges.get(name)
+        if iv is None:
+            return v
+        if iv.lo is not None:
+            v = max(v, iv.lo)
+        if iv.hi is not None:
+            v = min(v, iv.hi)
+        return v
 
     if enable_scheduling:
         sched = schedule_graph(graph, sg)
@@ -107,8 +148,10 @@ def optimize(
             name: 64 for name in graph.free_symbols()}
         for name in graph.free_symbols():
             env.setdefault(name, 64)
-        probe_envs = [env, {k: max(1, v // 4) for k, v in env.items()},
-                      {k: v * 4 for k, v in env.items()}]
+        env = {k: _clamp(k, v) for k, v in env.items()}
+        probe_envs = [env,
+                      {k: _clamp(k, max(1, v // 4)) for k, v in env.items()},
+                      {k: _clamp(k, v * 4) for k, v in env.items()}]
         base = simulate_peak(graph, graph.nodes, env, count_inputs=count_inputs)
         tuned = simulate_peak(graph, sched.order, env, count_inputs=count_inputs)
         used_sched = tuned.peak_bytes <= base.peak_bytes
@@ -130,10 +173,18 @@ def optimize(
 
     plan = build_plan(graph, sched, sg, enable_remat=enable_remat,
                       max_subgraph=max_subgraph)
+    peak_lo = peak_hi = None
+    if sg.declared_ranges:  # without ranges the bound is vacuous (hi = None)
+        peak_lo, peak_hi = simulate_peak_bound(graph, sched.order, sg,
+                                               count_inputs=count_inputs,
+                                               donate_inputs=donate_inputs)
     report = OptimizeReport(schedule=sched,
                             n_candidates=plan.n_candidates,
                             n_recomputable=plan.n_recomputable,
-                            used_scheduled_order=used_sched)
+                            used_scheduled_order=used_sched,
+                            n_static_regen=plan.n_static_regen,
+                            peak_bound_bytes=peak_hi,
+                            peak_bound_lo=peak_lo)
 
     flat, in_tree = tree_util.tree_flatten((example_args, example_kwargs))
     out_shapes = jax.eval_shape(fn, *example_args, **example_kwargs)

@@ -75,6 +75,14 @@ class PlanInterpreter:
         t0 = time.perf_counter()
         g, plan = self.g, self.plan
         env = solve_env(g, flat_args)
+        # declared dim ranges are a contract: compile-time decisions
+        # (schedule, static regen methods, guaranteed peak) assume them
+        for name, iv in plan.shape_graph.declared_ranges.items():
+            v = env.get(name)
+            if v is not None and not iv.contains(v):
+                raise ValueError(
+                    f"dim {name!r}={v} outside its declared range {iv}; "
+                    f"re-optimize with wider dynamic_dims to run this shape")
         mm = MemoryManager(self.memory_limit)
         policy = RuntimeRematPolicy(plan, env)
         env_key = tuple(sorted(env.items()))

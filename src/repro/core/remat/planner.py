@@ -14,7 +14,7 @@ from typing import Dict, List, Optional, Sequence
 from ..ir.graph import Graph, Node
 from ..scheduling.scheduler import ScheduleResult
 from ..symbolic import ShapeGraph
-from .search import CandidateInfo, RecomputeSearcher
+from .search import CandidateInfo, RecomputeSearcher, static_regen_method
 
 
 @dataclass
@@ -28,6 +28,9 @@ class ExecutionPlan:
     pos: Dict[int, int] = field(default_factory=dict)
     # value id -> sorted consumer positions
     use_positions: Dict[int, List[int]] = field(default_factory=dict)
+    # value id -> regen method fixed at compile time by interval bounds
+    # ('recompute' | 'offload'); absent keys stay env-dependent at runtime
+    static_methods: Dict[int, str] = field(default_factory=dict)
 
     def __post_init__(self):
         self.node_by_id = {n.id: n for n in self.graph.nodes}
@@ -35,6 +38,23 @@ class ExecutionPlan:
         for v in self.graph.values:
             self.use_positions[v.id] = sorted(
                 self.pos[c.id] for c in v.consumers if c.id in self.pos)
+        if not self.static_methods:
+            for vid, cand in self.candidates.items():
+                if cand.recompute_pruned_by_bounds:
+                    # bounds dropped the recompute plan during the search
+                    self.static_methods[vid] = "offload"
+                elif cand.recompute is not None:
+                    m = static_regen_method(cand)
+                    if m is not None:
+                        self.static_methods[vid] = m
+                # recompute=None without the pruned flag means the search
+                # simply found no beneficial subgraph — the bounds decided
+                # nothing, so it is not a static decision
+
+    @property
+    def n_static_regen(self) -> int:
+        """Candidates whose regen method the bounds fixed at compile time."""
+        return len(self.static_methods)
 
     @property
     def n_candidates(self) -> int:

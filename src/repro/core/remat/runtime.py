@@ -12,12 +12,12 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .planner import ExecutionPlan
+from .search import (OFFLOAD_COST_PER_BYTE, RECOMPUTE_COST_PER_FLOP,
+                     RELOAD_COST_PER_BYTE)
 
-# Cost model constants (relative): recompute cost ~ flops / FLOPS_PER_BYTE_COST,
-# reload cost ~ bytes * PCIE_COST.  Only ratios matter for victim ordering.
-_RECOMPUTE_COST_PER_FLOP = 1.0 / 50.0   # flops are cheap relative to transfers
-_RELOAD_COST_PER_BYTE = 1.0             # H2D per byte
-_OFFLOAD_COST_PER_BYTE = 1.0            # D2H per byte (paid at eviction)
+_RECOMPUTE_COST_PER_FLOP = RECOMPUTE_COST_PER_FLOP
+_RELOAD_COST_PER_BYTE = RELOAD_COST_PER_BYTE
+_OFFLOAD_COST_PER_BYTE = OFFLOAD_COST_PER_BYTE
 
 
 @dataclass
@@ -45,15 +45,24 @@ class RuntimeRematPolicy:
 
     def _regen_cost(self, vid: int, nbytes: int) -> Tuple[str, float]:
         cand = self.plan.candidates.get(vid)
-        if cand is not None and cand.recompute is not None:
-            flops = self._flops_cache.get(vid)
-            if flops is None:
-                flops = max(1, cand.recompute.flops.evaluate(self.env))
-                self._flops_cache[vid] = flops
-            rc = flops * _RECOMPUTE_COST_PER_FLOP
-            ol = nbytes * (_RELOAD_COST_PER_BYTE + _OFFLOAD_COST_PER_BYTE)
-            return ("recompute", rc) if rc <= ol else ("offload", ol)
-        return "offload", nbytes * (_RELOAD_COST_PER_BYTE + _OFFLOAD_COST_PER_BYTE)
+        per_byte = _RELOAD_COST_PER_BYTE + _OFFLOAD_COST_PER_BYTE
+        if cand is None or cand.recompute is None:
+            return "offload", nbytes * per_byte
+        # interval bounds may have fixed the method at compile time — skip
+        # the symbolic flops evaluation entirely for statically-offload
+        # candidates and keep only the (cached) cost lookup for recompute
+        static = self.plan.static_methods.get(vid)
+        if static == "offload":
+            return "offload", nbytes * per_byte
+        flops = self._flops_cache.get(vid)
+        if flops is None:
+            flops = max(1, cand.recompute.flops.evaluate(self.env))
+            self._flops_cache[vid] = flops
+        rc = flops * _RECOMPUTE_COST_PER_FLOP
+        if static == "recompute":
+            return "recompute", rc
+        ol = nbytes * per_byte
+        return ("recompute", rc) if rc <= ol else ("offload", ol)
 
     def choose_victims(
         self,

@@ -19,7 +19,14 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from ..ir.graph import Graph, Node, Value
-from ..symbolic import Cmp, ShapeGraph, SymbolicExpr, ZERO
+from ..symbolic import Cmp, Interval, ShapeGraph, SymbolicExpr, ZERO
+
+# Relative cost model shared by compile-time pruning (here) and runtime victim
+# scoring (remat/runtime.py): recompute cost ~ flops * RECOMPUTE_COST_PER_FLOP,
+# offload+reload cost ~ bytes * (D2H + H2D).  Only the ratios matter.
+RECOMPUTE_COST_PER_FLOP = 1.0 / 50.0   # flops are cheap relative to transfers
+RELOAD_COST_PER_BYTE = 1.0             # H2D per byte
+OFFLOAD_COST_PER_BYTE = 1.0            # D2H per byte (paid at eviction)
 
 # rough per-primitive cost model (symbolic FLOPs) -----------------------------
 
@@ -50,6 +57,10 @@ class RecomputePlan:
     source_ids: Tuple[int, ...]          # value ids that must be materialized
     impact: SymbolicExpr                 # symbolic memory benefit of evicting
     flops: SymbolicExpr                  # symbolic recompute cost
+    # guaranteed ranges over the shape graph's declared dim bounds, computed
+    # once at search time so the runtime policy never re-derives them
+    impact_interval: Interval = Interval()
+    flops_interval: Interval = Interval()
 
 
 @dataclass
@@ -57,6 +68,32 @@ class CandidateInfo:
     value: Value
     recompute: Optional[RecomputePlan]   # None if no beneficial subgraph found
     offloadable: bool = True             # reload is always available
+    bytes_interval: Interval = Interval()  # guaranteed range of device bytes
+    # True when a beneficial recompute plan existed but interval bounds
+    # proved reload always cheaper, so it was dropped at compile time
+    recompute_pruned_by_bounds: bool = False
+
+
+def static_regen_method(cand: CandidateInfo) -> Optional[str]:
+    """Decide recompute-vs-offload at compile time when bounds prove it.
+
+    Returns ``'recompute'`` / ``'offload'`` when one regeneration method is
+    cheaper for *every* env within the declared dim ranges, else ``None``
+    (the runtime policy evaluates concretely).  Candidates without a
+    recompute plan are always ``'offload'``.
+    """
+    if cand.recompute is None:
+        return "offload"
+    flops = cand.recompute.flops_interval
+    nbytes = cand.bytes_interval
+    per_byte = RELOAD_COST_PER_BYTE + OFFLOAD_COST_PER_BYTE
+    if flops.hi is not None and nbytes.lo is not None and \
+            flops.hi * RECOMPUTE_COST_PER_FLOP <= nbytes.lo * per_byte:
+        return "recompute"
+    if nbytes.hi is not None and flops.lo is not None and \
+            flops.lo * RECOMPUTE_COST_PER_FLOP >= nbytes.hi * per_byte:
+        return "offload"
+    return None
 
 
 class RecomputeSearcher:
@@ -85,9 +122,16 @@ class RecomputeSearcher:
             imp = imp - src.nbytes_expr
         return imp
 
-    def search(self, target: Value) -> Optional[RecomputePlan]:
+    def search(self, target: Value,
+               bytes_interval: Optional[Interval] = None) -> Optional[RecomputePlan]:
         """Greedy backward growth, keeping the best symbolic impact seen."""
         if target.producer is None:
+            return None
+        # bounds-based compile-time prune: a target whose worst-case byte
+        # count is zero can never free memory, skip the subgraph search
+        if bytes_interval is None:
+            bytes_interval = self.sg.interval_of(target.nbytes_expr)
+        if bytes_interval.hi == 0:
             return None
         sub: Set[Node] = {target.producer}
         best_nodes = set(sub)
@@ -118,7 +162,9 @@ class RecomputeSearcher:
             flops = flops + node_flops(n)
         sources = tuple(s.id for s in self._sources(best_nodes))
         return RecomputePlan(target, tuple(n.id for n in order), sources,
-                             best_imp, flops)
+                             best_imp, flops,
+                             impact_interval=self.sg.interval_of(best_imp),
+                             flops_interval=self.sg.interval_of(flops))
 
     # -- full exploration (paper: "explores all rematerialization candidates") --
     def explore(self, order: Sequence[Node]) -> Dict[int, CandidateInfo]:
@@ -141,5 +187,19 @@ class RecomputeSearcher:
             last_use = max(pos[c.id] for c in v.consumers if c.id in pos)
             if last_use <= p + 1:
                 continue  # never idle: evicting it can't help
-            out[v.id] = CandidateInfo(value=v, recompute=self.search(v))
+            bytes_iv = self.sg.interval_of(v.nbytes_expr)
+            if bytes_iv.hi == 0:
+                continue  # provably empty for every env: never profitable
+            info = CandidateInfo(value=v,
+                                 recompute=self.search(v, bytes_iv),
+                                 bytes_interval=bytes_iv)
+            if info.recompute is not None and \
+                    static_regen_method(info) == "offload":
+                # bounds prove reload is cheaper for every env in range:
+                # drop the recompute plan at compile time so the runtime
+                # never scores it
+                info = CandidateInfo(value=v, recompute=None,
+                                     bytes_interval=bytes_iv,
+                                     recompute_pruned_by_bounds=True)
+            out[v.id] = info
         return out

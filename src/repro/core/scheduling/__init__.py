@@ -1,4 +1,5 @@
-from .memsim import MemTimeline, simulate_peak
+from .memsim import MemTimeline, simulate_peak, simulate_peak_bound
 from .scheduler import OpScheduler, ScheduleResult, schedule_graph
 
-__all__ = ["MemTimeline", "simulate_peak", "OpScheduler", "ScheduleResult", "schedule_graph"]
+__all__ = ["MemTimeline", "simulate_peak", "simulate_peak_bound",
+           "OpScheduler", "ScheduleResult", "schedule_graph"]

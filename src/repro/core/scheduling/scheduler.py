@@ -136,12 +136,17 @@ class OpScheduler:
             for cand in ready[1:]:
                 ci = self._impact(cand, remaining)
                 c = self._compare(ci, best_imp)
-                if c is Cmp.LT:
+                if c in (Cmp.LT, Cmp.LE):
+                    # cand's impact is no worse everywhere (strictly better
+                    # for LT); switching is symbolically justified — with
+                    # declared dim ranges the interval fallback turns many
+                    # previously UNKNOWN pairs into LT/LE/GE/GT here.
                     best, best_imp = cand, ci
                     sym_dec += 1
-                elif c is Cmp.GT:
+                elif c in (Cmp.GT, Cmp.GE):
+                    # keeping the incumbent is symbolically justified
                     sym_dec += 1
-                else:  # EQ / LE / GE / UNKNOWN -> lifetime tie-break
+                else:  # EQ (memory-neutral) / UNKNOWN -> lifetime tie-break
                     tie_dec += 1
                     if self._tiebreak_key(cand, orig_pos, remaining) < \
                        self._tiebreak_key(best, orig_pos, remaining):

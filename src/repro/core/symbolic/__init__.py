@@ -1,9 +1,13 @@
 from .expr import Atom, OpAtom, SymbolicExpr, ZERO, ONE, size_of
+from .intervals import BoundEnv, Interval, as_interval
 from .shape_graph import Cmp, ShapeGraph
-from .from_jax import dim_to_expr, is_symbolic_dim, refine_dim, shape_to_exprs
+from .from_jax import (declare_dim_ranges, dim_to_expr, is_symbolic_dim,
+                       parse_range_spec, refine_dim, shape_to_exprs)
 
 __all__ = [
     "Atom", "OpAtom", "SymbolicExpr", "ZERO", "ONE", "size_of",
+    "BoundEnv", "Interval", "as_interval",
     "Cmp", "ShapeGraph",
-    "dim_to_expr", "is_symbolic_dim", "refine_dim", "shape_to_exprs",
+    "declare_dim_ranges", "dim_to_expr", "is_symbolic_dim",
+    "parse_range_spec", "refine_dim", "shape_to_exprs",
 ]

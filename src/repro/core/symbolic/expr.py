@@ -16,7 +16,13 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, Mapping, Optional, Tuple, Union
+from typing import TYPE_CHECKING, Dict, Iterable, Mapping, Optional, Tuple, Union
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .intervals import BoundEnv, Interval
+
+# declared ranges accepted by SymbolicExpr.interval / .bounds
+BoundsLike = Union[None, "BoundEnv", Mapping[str, object]]
 
 # ---------------------------------------------------------------------------
 # Atoms
@@ -264,41 +270,35 @@ class SymbolicExpr:
         return out
 
     # -- bounds ----------------------------------------------------------------
-    def bounds(
-        self,
-        lo_env: Callable[[AtomT], Optional[int]],
-        hi_env: Callable[[AtomT], Optional[int]],
-    ) -> Tuple[Optional[int], Optional[int]]:
-        """Interval bound of the polynomial given per-atom bounds.
+    def interval(self, env_bounds: "BoundsLike" = None) -> "Interval":
+        """Conservative integer interval of this expression.
 
-        Atoms are assumed nonnegative (tensor dims), so a monomial with
-        positive coefficient is minimized at atom lower bounds and maximized
-        at upper bounds (and vice versa for negative coefficients).  Returns
-        (lo, hi); ``None`` means unbounded in that direction.
+        ``env_bounds`` maps symbolic dim names to declared ranges — a
+        :class:`~repro.core.symbolic.intervals.BoundEnv`, a plain mapping
+        ``{name: (lo, hi)}`` (``None`` = unbounded; a bare int declares
+        only the upper bound), or ``None`` for the default assumption that
+        every dim is ``>= 1``.  Opaque atoms (floordiv/mod/max/min) use the
+        exact interval rules from :mod:`intervals`.
         """
-        total_lo: Optional[int] = 0
-        total_hi: Optional[int] = 0
+        from .intervals import BoundEnv, Interval
+
+        env = env_bounds if isinstance(env_bounds, BoundEnv) else BoundEnv(env_bounds)
+        total = Interval.point(0)
         for mono, coeff in self.terms:
-            if not mono:  # constant
-                if total_lo is not None:
-                    total_lo += coeff
-                if total_hi is not None:
-                    total_hi += coeff
-                continue
-            mono_lo, mono_hi = 1, 1  # product of atom bounds
+            term = Interval.point(coeff)
             for atom, exp in mono:
-                alo, ahi = _atom_bounds(atom, lo_env, hi_env)
-                mono_lo = None if (mono_lo is None or alo is None) else mono_lo * (alo ** exp)
-                mono_hi = None if (mono_hi is None or ahi is None) else mono_hi * (ahi ** exp)
-            if coeff > 0:
-                t_lo = None if mono_lo is None else coeff * mono_lo
-                t_hi = None if mono_hi is None else coeff * mono_hi
-            else:
-                t_lo = None if mono_hi is None else coeff * mono_hi
-                t_hi = None if mono_lo is None else coeff * mono_lo
-            total_lo = None if (total_lo is None or t_lo is None) else total_lo + t_lo
-            total_hi = None if (total_hi is None or t_hi is None) else total_hi + t_hi
-        return total_lo, total_hi
+                term = term * _atom_interval(atom, env).power(exp)
+            total = total + term
+        return total
+
+    def bounds(self, env_bounds: "BoundsLike" = None) -> Tuple[Optional[int], Optional[int]]:
+        """``(lo, hi)`` integer bounds of this expression; see :meth:`interval`.
+
+        ``None`` means unbounded in that direction.  Sound: for every env
+        within the declared ranges, ``lo <= self.evaluate(env) <= hi``.
+        """
+        iv = self.interval(env_bounds)
+        return iv.lo, iv.hi
 
     # -- dunder -----------------------------------------------------------------
     def __eq__(self, other: object) -> bool:
@@ -347,38 +347,29 @@ def _rebuild_op_atom(op: str, operands: Tuple[SymbolicExpr, ...]) -> SymbolicExp
     raise ValueError(op)
 
 
-def _atom_bounds(
-    atom: AtomT,
-    lo_env: Callable[[AtomT], Optional[int]],
-    hi_env: Callable[[AtomT], Optional[int]],
-) -> Tuple[Optional[int], Optional[int]]:
-    lo, hi = lo_env(atom), hi_env(atom)
-    if isinstance(atom, OpAtom) and (lo is None or hi is None):
-        # derive conservative bounds from operand bounds
-        ob = [o.bounds(lambda a: lo_env(a), lambda a: hi_env(a)) for o in atom.operands]
-        if atom.op == "floordiv":
-            (nlo, nhi), (dlo, dhi) = ob
-            d_lo = 0 if (nlo is None or dhi is None or dhi <= 0) else nlo // dhi
-            d_hi = None if (nhi is None or dlo is None or dlo <= 0) else nhi // dlo
-            lo = d_lo if lo is None else lo
-            hi = d_hi if hi is None else hi
-        elif atom.op == "mod":
-            _, (dlo, dhi) = ob
-            lo = 0 if lo is None else lo
-            hi = (dhi - 1 if dhi is not None else None) if hi is None else hi
-        elif atom.op == "max":
-            los = [b[0] for b in ob]
-            his = [b[1] for b in ob]
-            lo = (max(x for x in los if x is not None) if any(x is not None for x in los) else None) if lo is None else lo
-            hi = (None if any(x is None for x in his) else max(his)) if hi is None else hi
-        elif atom.op == "min":
-            los = [b[0] for b in ob]
-            his = [b[1] for b in ob]
-            lo = (None if any(x is None for x in los) else min(los)) if lo is None else lo
-            hi = (min(x for x in his if x is not None) if any(x is not None for x in his) else None) if hi is None else hi
-    if lo is None:
-        lo = 0  # tensor dims are nonnegative
-    return lo, hi
+def _atom_interval(atom: AtomT, env) -> "Interval":
+    """Interval of a single atom under a BoundEnv (exact OpAtom rules)."""
+    from .intervals import Interval
+
+    if isinstance(atom, Atom):
+        return env.lookup(atom.name)
+    # opaque compound: recurse into operand expressions
+    ops = [o.interval(env) for o in atom.operands]
+    if atom.op == "floordiv":
+        return ops[0].floordiv(ops[1])
+    if atom.op == "mod":
+        return ops[0].mod(ops[1])
+    if atom.op == "max":
+        out = ops[0]
+        for o in ops[1:]:
+            out = out.max_(o)
+        return out
+    if atom.op == "min":
+        out = ops[0]
+        for o in ops[1:]:
+            out = out.min_(o)
+        return out
+    return Interval(0, None)  # unknown opaque op: nonnegative dim arithmetic
 
 
 ExprLike = Union[int, SymbolicExpr]

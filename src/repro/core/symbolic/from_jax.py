@@ -13,7 +13,7 @@ reduces comparability, never correctness).
 """
 from __future__ import annotations
 
-from typing import Any, Mapping, Tuple
+from typing import Any, Mapping, Optional, Tuple
 
 from .expr import Atom, OpAtom, SymbolicExpr
 
@@ -74,3 +74,50 @@ def refine_dim(d: Any, env: Mapping[str, int]) -> int:
     if isinstance(d, int):
         return d
     return dim_to_expr(d).evaluate(env)
+
+
+# -- declared dim ranges (bounded dynamic shapes) -----------------------------
+
+
+def parse_range_spec(spec: Any) -> Tuple[Any, Any]:
+    """Parse a user-facing dim-range spec into ``(lo, hi)``.
+
+    Accepted forms (``None`` = unbounded on that side):
+
+    - ``(lo, hi)`` tuple/list — either entry may be ``None``;
+    - a bare ``int`` N — torch_xla-style ``<=N`` upper bound, lo defaults 1;
+    - strings ``"lo..hi"``, ``"..hi"``, ``"lo.."``, ``"<=hi"``, ``">=lo"``.
+    """
+    if isinstance(spec, int):
+        return 1, int(spec)
+    if isinstance(spec, (tuple, list)):
+        if len(spec) != 2:
+            raise ValueError(f"range spec must be (lo, hi), got {spec!r}")
+        lo, hi = spec
+        return (None if lo is None else int(lo),
+                None if hi is None else int(hi))
+    if isinstance(spec, str):
+        s = spec.replace(" ", "")
+        if s.startswith("<="):
+            return 1, int(s[2:])
+        if s.startswith(">="):
+            return int(s[2:]), None
+        if ".." in s:
+            lo_s, hi_s = s.split("..", 1)
+            return (int(lo_s) if lo_s else None), (int(hi_s) if hi_s else None)
+        raise ValueError(f"unrecognized range spec {spec!r}")
+    raise TypeError(f"unrecognized range spec {spec!r}")
+
+
+def declare_dim_ranges(shape_graph: Any, specs: Optional[Mapping[str, Any]]) -> None:
+    """Record ``optimize(..., dynamic_dims=...)`` range specs on a ShapeGraph.
+
+    ``specs`` maps symbolic dim names (as written in ``symbolic_dims``) to
+    :func:`parse_range_spec`-accepted values.  Dims traced but absent from
+    ``specs`` keep the default ``[1, +inf)`` assumption.
+    """
+    if not specs:
+        return
+    for name, spec in specs.items():
+        lo, hi = parse_range_spec(spec)
+        shape_graph.declare_range(name, lo, hi)

@@ -1,11 +1,21 @@
-"""The global symbolic shape graph (paper §2.1).
+"""The global symbolic shape graph (paper §2.1) + declared dim ranges.
 
 Collects algebraic relationships between symbolic dimensions — e.g.
 ``@S0 = 12 * @S1`` derived from a ``DynamicReshapeOp`` — and uses them to
 *canonicalize* ``SymbolicExpr``s so that expressions written over different
-symbol sets become comparable.  Comparison is best-effort (the paper's
-wording): decide by the sign of the canonicalized difference polynomial,
-using per-symbol lower/upper bounds when the sign is not uniform.
+symbol sets become comparable.  Comparison is layered:
+
+1. canonicalize the difference polynomial and decide by its constant value
+   when it is constant;
+2. otherwise fall back to **interval bounds**: every symbolic dim carries a
+   declared range (``declare_range``; default ``[1, +inf)``), the difference
+   is evaluated in interval arithmetic, and interval separation decides.
+
+Layer 2 is what bounded dynamic shapes buy us (torch_xla-style ``<=N``
+dims): with ranges declared, many previously "incomparable" scheduling and
+remat decisions resolve at compile time, and peak memory gets a guaranteed
+worst-case bound.  ``cmp_stats`` records which layer resolved each query so
+benchmarks can report the interval layer's contribution.
 """
 from __future__ import annotations
 
@@ -13,6 +23,7 @@ import enum
 from typing import Dict, Mapping, Optional, Tuple
 
 from .expr import Atom, AtomT, ExprLike, OpAtom, SymbolicExpr
+from .intervals import BoundEnv, Interval, RangeLike
 
 
 class Cmp(enum.Enum):
@@ -25,18 +36,21 @@ class Cmp(enum.Enum):
 
 
 class ShapeGraph:
-    """Equalities between symbolic dims + bound info, with rewriting.
+    """Equalities between symbolic dims + declared ranges, with rewriting.
 
     ``add_equality(sym, expr)`` records ``sym == expr`` (the paper's
     ``@S0 = Mul @C12, @S1``).  Internally we keep a substitution map toward
     "root" symbols and apply it to fixpoint during canonicalization.
+    ``declare_range(sym, lo, hi)`` records ``lo <= sym <= hi`` for the
+    interval fallback.
     """
 
     def __init__(self) -> None:
         self._subst: Dict[AtomT, SymbolicExpr] = {}
-        self._lo: Dict[AtomT, int] = {}
-        self._hi: Dict[AtomT, int] = {}
-        self.default_lo = 1  # dynamic dims come from data; assume >= 1
+        self._bounds = BoundEnv(default_lo=1)  # dynamic dims come from data
+        # how comparisons were resolved: constant difference, interval
+        # separation, or not at all — consumed by benchmarks/symbolic_coverage
+        self.cmp_stats: Dict[str, int] = {"const": 0, "interval": 0, "unknown": 0}
 
     # -- building -------------------------------------------------------------
     def add_equality(self, sym: "AtomT | str", expr: ExprLike) -> None:
@@ -58,13 +72,28 @@ class ShapeGraph:
             if k != sym:
                 self._subst[k] = self._apply(self._subst[k])
 
-    def set_bounds(self, sym: "AtomT | str", lo: Optional[int] = None, hi: Optional[int] = None) -> None:
-        if isinstance(sym, str):
-            sym = Atom(sym)
-        if lo is not None:
-            self._lo[sym] = int(lo)
-        if hi is not None:
-            self._hi[sym] = int(hi)
+    def declare_range(self, sym: "Atom | str", lo: Optional[int] = None,
+                      hi: Optional[int] = None) -> None:
+        """Declare ``lo <= sym <= hi`` (either side may stay unbounded)."""
+        name = sym.name if isinstance(sym, Atom) else str(sym)
+        prev = self._bounds.lookup(name)
+        lo = prev.lo if lo is None else int(lo)
+        hi = prev.hi if hi is None else int(hi)
+        if lo is not None and lo < 0:
+            raise ValueError(f"dim {name!r} cannot be negative (lo={lo})")
+        self._bounds.declare(name, Interval(lo, hi))
+
+    # backwards-compatible alias used by earlier code/tests
+    def set_bounds(self, sym: "Atom | str", lo: Optional[int] = None,
+                   hi: Optional[int] = None) -> None:
+        self.declare_range(sym, lo, hi)
+
+    @property
+    def declared_ranges(self) -> Mapping[str, Interval]:
+        return self._bounds.declared()
+
+    def bound_env(self) -> BoundEnv:
+        return self._bounds
 
     # -- canonicalization -------------------------------------------------------
     def _apply(self, e: SymbolicExpr, max_iter: int = 16) -> SymbolicExpr:
@@ -80,30 +109,40 @@ class ShapeGraph:
     def canonicalize(self, e: ExprLike) -> SymbolicExpr:
         return self._apply(SymbolicExpr.wrap(e))
 
+    # -- bounds ------------------------------------------------------------------
+    def interval_of(self, e: ExprLike) -> Interval:
+        """Sound integer interval of ``e`` under equalities + declared ranges."""
+        return self.canonicalize(e).interval(self._bounds)
+
+    def bounds_of(self, e: ExprLike) -> Tuple[Optional[int], Optional[int]]:
+        iv = self.interval_of(e)
+        return iv.lo, iv.hi
+
     # -- comparison ---------------------------------------------------------------
-    def _lo_env(self, a: AtomT) -> Optional[int]:
-        return self._lo.get(a, self.default_lo if isinstance(a, Atom) else None)
-
-    def _hi_env(self, a: AtomT) -> Optional[int]:
-        return self._hi.get(a)
-
     def compare(self, e1: ExprLike, e2: ExprLike) -> Cmp:
         """Best-effort comparison of two SymbolicExprs (paper §2.1/2.2)."""
         d = self.canonicalize(SymbolicExpr.wrap(e1) - SymbolicExpr.wrap(e2))
         c = d.constant_value()
         if c is not None:
+            self.cmp_stats["const"] += 1
             if c == 0:
                 return Cmp.EQ
             return Cmp.GT if c > 0 else Cmp.LT
-        lo, hi = d.bounds(self._lo_env, self._hi_env)
+        iv = d.interval(self._bounds)
+        lo, hi = iv.lo, iv.hi
         if lo is not None and lo > 0:
+            self.cmp_stats["interval"] += 1
             return Cmp.GT
-        if lo is not None and lo >= 0:
-            return Cmp.GE
         if hi is not None and hi < 0:
+            self.cmp_stats["interval"] += 1
             return Cmp.LT
+        if lo is not None and lo >= 0:
+            self.cmp_stats["interval"] += 1
+            return Cmp.GE
         if hi is not None and hi <= 0:
+            self.cmp_stats["interval"] += 1
             return Cmp.LE
+        self.cmp_stats["unknown"] += 1
         return Cmp.UNKNOWN
 
     def definitely_le(self, e1: ExprLike, e2: ExprLike) -> bool:
@@ -125,4 +164,6 @@ class ShapeGraph:
 
     def __repr__(self) -> str:  # pragma: no cover
         rules = ", ".join(f"{k!r}={v!r}" for k, v in self._subst.items())
-        return f"ShapeGraph({rules})"
+        ranges = ", ".join(f"{k}∈{v!r}" for k, v in sorted(self.declared_ranges.items()))
+        body = "; ".join(x for x in (rules, ranges) if x)
+        return f"ShapeGraph({body})"

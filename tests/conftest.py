@@ -1,0 +1,81 @@
+"""Test-suite bootstrap: a minimal ``hypothesis`` fallback.
+
+The property-based tests use `hypothesis <https://hypothesis.works>`_ when
+it is installed (the declared dev dependency — see ``pyproject.toml`` and
+CI).  Some execution environments ship only the runtime deps; rather than
+failing at collection, this conftest installs a tiny API-compatible shim
+that drives each ``@given`` test with deterministic pseudo-random examples.
+The shim covers exactly the subset this suite uses: ``given``, ``settings``
+and the ``integers`` / ``sampled_from`` / ``booleans`` / ``lists`` /
+``tuples`` strategies.  Real hypothesis, when present, always wins.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+try:  # pragma: no cover - prefer the real package
+    import hypothesis  # noqa: F401
+except ImportError:
+    _SEED = 0xB1ADED15C  # deterministic: same examples on every run
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rnd: rnd.choice(elements))
+
+    def booleans():
+        return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+    def lists(elem, min_size=0, max_size=8):
+        return _Strategy(
+            lambda rnd: [elem.draw(rnd)
+                         for _ in range(rnd.randint(min_size, max_size))])
+
+    def tuples(*elems):
+        return _Strategy(lambda rnd: tuple(e.draw(rnd) for e in elems))
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper():
+                rnd = random.Random(_SEED)
+                for _ in range(getattr(wrapper, "_max_examples", 50)):
+                    args = [s.draw(rnd) for s in strategies]
+                    kwargs = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+            # NB: no __wrapped__ — pytest would unwrap to fn's signature and
+            # mistake the example parameters for fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = 50
+            return wrapper
+        return deco
+
+    def settings(max_examples=50, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = integers
+    _st.sampled_from = sampled_from
+    _st.booleans = booleans
+    _st.lists = lists
+    _st.tuples = tuples
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.strategies = _st
+    _hyp.__is_shim__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

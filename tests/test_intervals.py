@@ -1,0 +1,372 @@
+"""Interval-bounds layer: soundness, exactness, and compiler integration.
+
+The tentpole property: for any expression and any env within the declared
+dim ranges, ``lo <= expr.evaluate(env) <= hi``.  Plus: the bounds-fallback
+``Cmp`` never contradicts the polynomial ``Cmp`` or concrete evaluation,
+``simulate_peak_bound`` dominates every simulated peak, and the remat
+layer's compile-time static decisions agree with the runtime cost model.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import optimize, symbolic_dims
+from repro.core.ir import trace_to_graph
+from repro.core.remat.planner import build_plan
+from repro.core.remat.search import (OFFLOAD_COST_PER_BYTE,
+                                     RECOMPUTE_COST_PER_FLOP,
+                                     RELOAD_COST_PER_BYTE, CandidateInfo,
+                                     static_regen_method)
+from repro.core.scheduling import (schedule_graph, simulate_peak,
+                                   simulate_peak_bound)
+from repro.core.symbolic import (BoundEnv, Cmp, Interval, ShapeGraph,
+                                 SymbolicExpr, declare_dim_ranges,
+                                 parse_range_spec)
+
+
+# declared ranges used by the random-expression properties
+RANGES = {"a": (1, 9), "b": (2, 12), "c": (1, 100)}
+
+
+def V(n):
+    return SymbolicExpr.var(n)
+
+
+def random_expr(rnd: random.Random, depth: int = 0) -> SymbolicExpr:
+    """A random SymbolicExpr over the RANGES vars, all ops included."""
+    if depth >= 3 or rnd.random() < 0.3:
+        if rnd.random() < 0.7:
+            return V(rnd.choice(list(RANGES)))
+        return SymbolicExpr.constant(rnd.randint(-5, 20))
+    op = rnd.choice(["add", "sub", "mul", "floordiv", "mod", "max", "min"])
+    x = random_expr(rnd, depth + 1)
+    if op == "add":
+        return x + random_expr(rnd, depth + 1)
+    if op == "sub":
+        return x - random_expr(rnd, depth + 1)
+    if op == "mul":
+        return x * random_expr(rnd, depth + 1)
+    # divisor must be positive: a constant or a var (all vars are >= 1)
+    d = SymbolicExpr.constant(rnd.randint(2, 7)) if rnd.random() < 0.5 \
+        else V(rnd.choice(list(RANGES)))
+    if op == "floordiv":
+        return x.floordiv(d)
+    if op == "mod":
+        return x.mod(d)
+    if op == "max":
+        return SymbolicExpr.max_of(x, d)
+    return SymbolicExpr.min_of(x, d)
+
+
+def random_env(rnd: random.Random) -> dict:
+    return {k: rnd.randint(lo, hi) for k, (lo, hi) in RANGES.items()}
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_property_interval_soundness(seed):
+    """lo <= expr.evaluate(env) <= hi for every env within declared ranges."""
+    rnd = random.Random(seed)
+    e = random_expr(rnd)
+    lo, hi = e.bounds(RANGES)
+    for _ in range(5):
+        v = e.evaluate(random_env(rnd))
+        assert lo is None or lo <= v, (e, lo, v)
+        assert hi is None or v <= hi, (e, hi, v)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_property_cmp_agrees_with_evaluation(seed):
+    """A bounds-resolved Cmp claim holds at every env within the ranges."""
+    rnd = random.Random(seed)
+    e1, e2 = random_expr(rnd), random_expr(rnd)
+    sg = ShapeGraph()
+    declare_dim_ranges(sg, RANGES)
+    c = sg.compare(e1, e2)
+    for _ in range(5):
+        env = random_env(rnd)
+        v1, v2 = e1.evaluate(env), e2.evaluate(env)
+        if c is Cmp.LT:
+            assert v1 < v2
+        elif c is Cmp.LE:
+            assert v1 <= v2
+        elif c is Cmp.EQ:
+            assert v1 == v2
+        elif c is Cmp.GE:
+            assert v1 >= v2
+        elif c is Cmp.GT:
+            assert v1 > v2
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_property_bounds_fallback_never_contradicts_polynomial(seed):
+    """Declaring ranges only refines UNKNOWNs; it never flips a strict
+    polynomial verdict."""
+    rnd = random.Random(seed)
+    e1, e2 = random_expr(rnd), random_expr(rnd)
+    plain, ranged = ShapeGraph(), ShapeGraph()
+    declare_dim_ranges(ranged, RANGES)
+    c1, c2 = plain.compare(e1, e2), ranged.compare(e1, e2)
+    strict = {Cmp.LT: -1, Cmp.GT: 1, Cmp.EQ: 0}
+    if c1 in strict and c2 in strict:
+        # LT can refine LE-style claims but never become GT (and vice versa)
+        assert strict[c1] * strict[c2] >= 0, (e1, e2, c1, c2)
+    if c1 is Cmp.LT:
+        assert c2 in (Cmp.LT, Cmp.LE)
+    if c1 is Cmp.GT:
+        assert c2 in (Cmp.GT, Cmp.GE)
+
+
+class TestIntervalExactRules:
+    """Brute-force exactness of the non-polynomial op rules."""
+
+    def _check(self, op, a, b):
+        vals = [op(x, y) for x in range(a.lo, a.hi + 1)
+                for y in range(b.lo, b.hi + 1) if y != 0]
+        return min(vals), max(vals)
+
+    def test_floordiv_positive_denominator(self):
+        for alo in (-7, 0, 3):
+            a = Interval(alo, alo + 6)
+            b = Interval(2, 5)
+            lo, hi = self._check(lambda x, y: x // y, a, b)
+            iv = a.floordiv(b)
+            assert (iv.lo, iv.hi) == (lo, hi)
+
+    def test_floordiv_unbounded_denominator(self):
+        # d -> +inf: quotient tends to 0 from above for n>0, to -1 for n<0
+        assert Interval(2, 5).floordiv(Interval(1, None)) == Interval(0, 5)
+        assert Interval(-5, -2).floordiv(Interval(1, None)) == Interval(-5, -1)
+        assert Interval(-5, 5).floordiv(Interval(3, None)) == Interval(-2, 1)
+        # d -> -inf with n>0: quotient in [n//-1, -1]
+        assert Interval(2, 5).floordiv(Interval(None, -1)) == Interval(-5, -1)
+
+    def test_floordiv_default_dims_nonnegative(self):
+        # the seed resolved a//b >= 0 for dims >= 1; must not regress
+        g = ShapeGraph()
+        e = V("a").floordiv(V("b"))
+        assert g.compare(e, 0) in (Cmp.GE, Cmp.GT)
+
+    def test_floordiv_mixed_denominator_is_sound(self):
+        a, b = Interval(-4, 9), Interval(-3, 3)
+        iv = a.floordiv(b)
+        lo, hi = self._check(lambda x, y: x // y, a, b)
+        assert iv.lo <= lo and hi <= iv.hi
+
+    def test_mod_constant_denominator_residue_window(self):
+        # numerator within one residue window -> exact [5%4, 6%4]
+        assert Interval(5, 6).mod(Interval(4, 4)) == Interval(1, 2)
+        # window wraps -> falls back to [0, d-1]
+        assert Interval(3, 6).mod(Interval(4, 4)) == Interval(0, 3)
+
+    def test_mod_is_sound(self):
+        for dlo, dhi in ((1, 5), (2, 2), (-5, -2)):
+            a, b = Interval(-9, 9), Interval(dlo, dhi)
+            lo, hi = self._check(lambda x, y: x % y, a, b)
+            iv = a.mod(b)
+            assert iv.lo <= lo and hi <= iv.hi
+
+    def test_max_min(self):
+        a, b = Interval(1, 10), Interval(4, 6)
+        assert a.max_(b) == Interval(4, 10)
+        assert a.min_(b) == Interval(1, 6)
+        assert Interval(1, None).max_(Interval(5, 9)) == Interval(5, None)
+        assert Interval(1, None).min_(Interval(5, 9)) == Interval(1, 9)
+
+    def test_mul_corners_with_negatives(self):
+        a, b = Interval(-3, 4), Interval(-5, 2)
+        vals = [x * y for x in range(-3, 5) for y in range(-5, 3)]
+        assert (a * b) == Interval(min(vals), max(vals))
+
+    def test_unbounded_sides(self):
+        assert (Interval(1, None) + Interval(2, 3)) == Interval(3, None)
+        assert (-Interval(1, None)) == Interval(None, -1)
+        assert (Interval(0, None) * Interval(2, 4)) == Interval(0, None)
+
+    def test_power_even_tightens_at_zero(self):
+        assert Interval(-3, 2).power(2) == Interval(0, 9)
+        assert Interval(-3, 2).power(3) == Interval(-27, 8)
+
+
+class TestRangeSpecs:
+    def test_parse_forms(self):
+        assert parse_range_spec((2, 8)) == (2, 8)
+        assert parse_range_spec((None, 8)) == (None, 8)
+        assert parse_range_spec(25) == (1, 25)          # torch_xla-style <=25
+        assert parse_range_spec("<=4096") == (1, 4096)
+        assert parse_range_spec(">=16") == (16, None)
+        assert parse_range_spec("16..4096") == (16, 4096)
+        assert parse_range_spec("..128") == (None, 128)
+        assert parse_range_spec("8..") == (8, None)
+
+    def test_bad_specs_raise(self):
+        with pytest.raises(ValueError):
+            parse_range_spec("whatever")
+        with pytest.raises((TypeError, ValueError)):
+            parse_range_spec(object())
+
+    def test_declare_on_shape_graph(self):
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"s": "<=4096", "b": (1, 64)})
+        assert sg.declared_ranges["s"] == Interval(1, 4096)
+        assert sg.compare(V("s"), 5000) is Cmp.LT
+        # range + equality compose: S0 = 12*S1, S1 <= 10 -> S0 <= 120
+        sg.add_equality("S0", 12 * V("S1"))
+        declare_dim_ranges(sg, {"S1": (1, 10)})
+        assert sg.compare(V("S0"), 121) is Cmp.LT
+
+    def test_bound_env_defaults(self):
+        env = BoundEnv({"a": (2, 5)})
+        assert env.lookup("a") == Interval(2, 5)
+        assert env.lookup("zzz") == Interval(1, None)  # dims >= 1 by default
+
+
+# -- compiler integration -----------------------------------------------------
+
+B, S = symbolic_dims("pb, ps")
+D, F = 16, 48
+
+
+def _step(w1, w2, x):
+    def loss(w1, w2, x):
+        h = jax.nn.gelu(x @ w1)
+        return ((h @ w2) ** 2).mean()
+    l, g = jax.value_and_grad(loss, argnums=(0, 1))(w1, w2, x)
+    return l, g
+
+
+def _specs():
+    return (jax.ShapeDtypeStruct((D, F), jnp.float32),
+            jax.ShapeDtypeStruct((F, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32))
+
+
+class TestPeakBound:
+    def test_bound_dominates_all_envs_in_range(self):
+        g, _ = trace_to_graph(_step, *_specs())
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"pb": (1, 6), "ps": (4, 64)})
+        res = schedule_graph(g, sg)
+        lo, hi = simulate_peak_bound(g, res.order, sg)
+        assert hi is not None and lo is not None and 0 < lo <= hi
+        worst = 0
+        for b in (1, 3, 6):
+            for s in (4, 33, 64):
+                tl = simulate_peak(g, res.order, {"pb": b, "ps": s})
+                assert tl.peak_bytes <= hi
+                worst = max(worst, tl.peak_bytes)
+        assert lo <= worst  # the lower bound is achievable-or-below
+
+    def test_unbounded_dim_gives_no_upper_bound(self):
+        g, _ = trace_to_graph(_step, *_specs())
+        sg = ShapeGraph()  # no ranges declared
+        _, hi = simulate_peak_bound(g, g.nodes, sg)
+        assert hi is None
+
+    def test_simulate_peak_attaches_bound(self):
+        g, _ = trace_to_graph(_step, *_specs())
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"pb": 6, "ps": 64})
+        tl = simulate_peak(g, g.nodes, {"pb": 2, "ps": 16}, shape_graph=sg)
+        assert tl.peak_bound_bytes is not None
+        assert tl.peak_bytes <= tl.peak_bound_bytes
+
+    def test_optimize_reports_guaranteed_peak(self):
+        opt = optimize(_step, *_specs(), dynamic_dims={"pb": (1, 6),
+                                                       "ps": "<=64"})
+        assert opt.guaranteed_peak_bytes is not None
+        import numpy as np
+        rng = np.random.RandomState(0)
+        w1 = jnp.asarray(rng.randn(D, F) * 0.1, jnp.float32)
+        w2 = jnp.asarray(rng.randn(F, D) * 0.1, jnp.float32)
+        for (b, s) in [(1, 4), (6, 64), (2, 40)]:
+            x = jnp.asarray(rng.randn(b, s, D), jnp.float32)
+            opt(w1, w2, x)
+            assert opt.last_report.stats.device_peak <= \
+                opt.guaranteed_peak_bytes
+
+    def test_declared_ranges_are_enforced(self):
+        # unknown dim names rejected at compile time
+        with pytest.raises(ValueError, match="not symbolic dims"):
+            optimize(_step, *_specs(), dynamic_dims={"typo": (1, 4)})
+        # out-of-range concrete dims rejected at run time
+        opt = optimize(_step, *_specs(), dynamic_dims={"pb": (1, 2),
+                                                       "ps": (1, 16)})
+        import numpy as np
+        x = jnp.asarray(np.zeros((4, 8, D)), jnp.float32)  # pb=4 > 2
+        w1 = jnp.zeros((D, F), jnp.float32)
+        w2 = jnp.zeros((F, D), jnp.float32)
+        with pytest.raises(ValueError, match="outside its declared range"):
+            opt(w1, w2, x)
+
+
+class TestSchedulerWithBounds:
+    def test_declared_ranges_do_not_reduce_symbolic_fraction(self):
+        g, _ = trace_to_graph(_step, *_specs())
+        plain = schedule_graph(g, ShapeGraph())
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"pb": (1, 6), "ps": (4, 64)})
+        ranged = schedule_graph(g, sg)
+        assert ranged.decision_symbolic_fraction >= \
+            plain.decision_symbolic_fraction
+        g.validate_order(ranged.order)
+
+    def test_interval_resolves_cross_symbol_comparison(self):
+        """The worked example from docs/architecture.md: incomparable
+        polynomials become ordered once ranges are declared."""
+        plain, ranged = ShapeGraph(), ShapeGraph()
+        declare_dim_ranges(ranged, {"b": (1, 64), "s": (16, 4096)})
+        lhs = 64 * V("b")                 # one op's memory impact
+        rhs = 4096 * V("b") * V("s")      # the other's
+        assert plain.compare(lhs, rhs) is Cmp.UNKNOWN
+        assert ranged.compare(lhs, rhs) is Cmp.LT
+
+
+class TestStaticRegen:
+    def _cand(self, flops_iv, bytes_iv):
+        # value/recompute contents are irrelevant to the decision
+        from repro.core.remat.search import RecomputePlan
+        from repro.core.symbolic import ZERO
+        plan = RecomputePlan(target=None, node_ids=(), source_ids=(),
+                             impact=ZERO, flops=ZERO,
+                             flops_interval=flops_iv)
+        return CandidateInfo(value=None, recompute=plan,
+                             bytes_interval=bytes_iv)
+
+    def test_cheap_recompute_fixed_statically(self):
+        per_byte = RELOAD_COST_PER_BYTE + OFFLOAD_COST_PER_BYTE
+        # worst-case recompute cost below best-case transfer cost
+        flops_hi = int(1000 * per_byte / RECOMPUTE_COST_PER_FLOP) - 1
+        cand = self._cand(Interval(1, flops_hi), Interval(1000, 2000))
+        assert static_regen_method(cand) == "recompute"
+
+    def test_expensive_recompute_fixed_statically(self):
+        per_byte = RELOAD_COST_PER_BYTE + OFFLOAD_COST_PER_BYTE
+        flops_lo = int(2000 * per_byte / RECOMPUTE_COST_PER_FLOP) + 1
+        cand = self._cand(Interval(flops_lo, None), Interval(1000, 2000))
+        assert static_regen_method(cand) == "offload"
+
+    def test_overlapping_costs_stay_dynamic(self):
+        cand = self._cand(Interval(1, None), Interval(1000, None))
+        assert static_regen_method(cand) is None
+
+    def test_no_recompute_plan_is_offload(self):
+        cand = CandidateInfo(value=None, recompute=None,
+                             bytes_interval=Interval(1, 10))
+        assert static_regen_method(cand) == "offload"
+
+    def test_plan_records_static_decisions(self):
+        g, _ = trace_to_graph(_step, *_specs())
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"pb": (1, 6), "ps": (4, 64)})
+        res = schedule_graph(g, sg)
+        plan = build_plan(g, res, sg)
+        assert plan.n_static_regen >= 0
+        for vid, m in plan.static_methods.items():
+            assert m in ("recompute", "offload")
+            assert vid in plan.candidates

@@ -127,6 +127,28 @@ class TestShapeGraph:
         assert g.compare(a + 1, 1) is Cmp.GT
         assert g.compare(a, 0) is Cmp.GT
 
+    def test_interval_of_respects_equalities(self):
+        g = ShapeGraph()
+        g.add_equality("S0", 12 * V("S1"))
+        g.declare_range("S1", lo=2, hi=10)
+        iv = g.interval_of(V("S0") + 5)
+        assert (iv.lo, iv.hi) == (29, 125)
+        assert g.bounds_of(V("S0")) == (24, 120)
+
+    def test_declare_range_merges_sides(self):
+        g = ShapeGraph()
+        g.declare_range("a", hi=10)
+        g.declare_range("a", lo=3)   # keeps the earlier upper bound
+        assert g.bounds_of(V("a")) == (3, 10)
+
+    def test_cmp_stats_layers(self):
+        g = ShapeGraph()
+        g.declare_range("a", hi=4)
+        g.compare(SymbolicExpr.constant(1), 2)      # constant layer
+        g.compare(V("a"), 100)                      # interval layer
+        g.compare(V("a"), V("zzz"))                 # unresolved
+        assert g.cmp_stats == {"const": 1, "interval": 1, "unknown": 1}
+
 
 class TestFromJax:
     def test_roundtrip_polynomial(self):
