@@ -1,0 +1,160 @@
+"""Memory-planner benchmark: logical peak vs planned arena vs bounds.
+
+For each benchmark arch, trace the train step with symbolic ``(b, s)``,
+schedule, build the symbolic arena plan (with and without input donation),
+and at several probe envs compare:
+
+  * ``peak``   — logical free-run peak bytes (``simulate_peak``, exact);
+  * ``arena``  — planned arena size (``ArenaPlan.arena_bytes``);
+  * ``arena_donated`` — same with ``donate_inputs=True`` (dead input
+    buffers join the reuse pool);
+  * ``arena_bound_bytes``     — guaranteed arena size over the declared
+    dim ranges (sound: no in-range env can need more);
+  * ``guaranteed_peak_bytes`` — the interval layer's guaranteed peak.
+
+Asserted invariants (the planner's contract):
+
+  * reuse never loses: ``arena <= peak`` at every probe env;
+  * planned reuse exists on every arch (``reuse_ratio > 0``);
+  * the bound is sound: ``arena <= arena_bound_bytes`` at every probe env.
+
+    PYTHONPATH=src python -m benchmarks.memplan_bench [--smoke] [--json F]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import symbolic_dims
+from repro.core.ir import trace_to_graph
+from repro.core.memplan import build_arena_plan
+from repro.core.scheduling import schedule_graph, simulate_peak, \
+    simulate_peak_bound
+from repro.core.symbolic import ShapeGraph, declare_dim_ranges
+from repro.launch.steps import adamw_config_for, make_train_step
+from repro.models import init_params
+from repro.optim import init_state
+
+ARCHS = ["llama2_1b", "gemma_2b", "granite_8b", "musicgen_medium"]
+SMOKE_ARCHS = ["llama2_1b", "musicgen_medium"]   # both input modes
+
+BATCH_RANGE = (1, 64)
+SEQ_RANGE = (16, 4096)
+PROBE_ENVS = [(1, 16), (8, 512), (64, 4096)]
+SMOKE_PROBE_ENVS = [(1, 16), (8, 512)]
+
+
+def _trace(arch):
+    cfg = dataclasses.replace(get_smoke_config(arch), scan_layers=False)
+    step = make_train_step(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_state(params, adamw_config_for(cfg))
+    B, S = symbolic_dims("b, s")
+    p = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    o = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     opt_state)
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    elif cfg.input_mode == "embeddings":
+        batch = {"frame_embed": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                     jnp.float32),
+                 "labels": jax.ShapeDtypeStruct((B, S, cfg.n_codebooks),
+                                                jnp.int32)}
+    else:
+        return None
+    g, _ = trace_to_graph(step, p, o, batch)
+    return g
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    archs = SMOKE_ARCHS if smoke else ARCHS
+    probes = SMOKE_PROBE_ENVS if smoke else PROBE_ENVS
+    rows = []
+    for arch in archs:
+        g = _trace(arch)
+        if g is None:
+            continue
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"b": BATCH_RANGE, "s": SEQ_RANGE})
+        res = schedule_graph(g, sg)
+        plan = build_arena_plan(g, res.order, sg)
+        plan_don = build_arena_plan(g, res.order, sg, donate_inputs=True)
+        _, peak_bound = simulate_peak_bound(g, res.order, sg)
+
+        assert plan.planned_reuse_ratio > 0, f"{arch}: no planned reuse"
+        envs, peaks, arenas, arenas_don = [], [], [], []
+        for (b, s) in probes:
+            env = {"b": b, "s": s}
+            peak = simulate_peak(g, res.order, env).peak_bytes
+            arena = plan.arena_bytes(env)
+            arena_d = plan_don.arena_bytes(env)
+            assert arena <= peak, \
+                f"{arch}@{env}: arena {arena} > logical peak {peak}"
+            assert plan.arena_bound_bytes is None \
+                or arena <= plan.arena_bound_bytes, \
+                f"{arch}@{env}: arena {arena} exceeds its guaranteed bound"
+            envs.append([b, s])
+            peaks.append(peak)
+            arenas.append(arena)
+            arenas_don.append(arena_d)
+
+        rows.append(dict(
+            arch=arch, nodes=len(g.nodes),
+            probe_envs=envs, peak_bytes=peaks, arena_bytes=arenas,
+            arena_donated_bytes=arenas_don,
+            arena_bound_bytes=plan.arena_bound_bytes,
+            guaranteed_peak_bytes=peak_bound,
+            slots=plan.n_slots,
+            reuse_ratio=round(plan.planned_reuse_ratio, 4),
+            provable_reuses=plan.n_provable_reuses,
+            checked_reuses=plan.n_checked_reuses,
+            donated_reuses=plan_don.n_donated_reuses,
+        ))
+    return rows
+
+
+def format_rows(rows: List[Dict]) -> str:
+    out = []
+    for r in rows:
+        out.append(f"{r['arch']:18s} slots={r['slots']:4d} "
+                   f"reuse={100*r['reuse_ratio']:.0f}% "
+                   f"(prov={r['provable_reuses']}, chk={r['checked_reuses']}, "
+                   f"don={r['donated_reuses']})")
+        for (b, s), peak, ar, ard in zip(r["probe_envs"], r["peak_bytes"],
+                                         r["arena_bytes"],
+                                         r["arena_donated_bytes"]):
+            out.append(f"    ({b:2d},{s:4d}): peak={peak/2**20:9.1f}MiB "
+                       f"arena={ar/2**20:9.1f}MiB ({ar/peak:5.1%}) "
+                       f"donated={ard/2**20:9.1f}MiB")
+        bound = r["arena_bound_bytes"]
+        gp = r["guaranteed_peak_bytes"]
+        out.append(f"    arena<= {bound/2**20:.0f}MiB guaranteed, "
+                   f"peak<= {gp/2**20:.0f}MiB guaranteed")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="two archs, two probe envs (CI)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write rows as JSON")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print(format_rows(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,12 @@
 """Benchmark harness: one entry per paper table + framework benches.
 
-Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
+Prints ``name,us_per_call,derived`` CSV lines per the repo convention and
+writes ``BENCH_memplan.json`` (peak/arena/bound per arch) so the memory
+planner's trajectory is machine-trackable across PRs.
     PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 import argparse
+import json
 import sys
 import time
 
@@ -23,8 +26,9 @@ def main() -> None:
     args = ap.parse_args()
     steps = 6 if args.fast else 12
 
-    from benchmarks import (remat_sweep, roofline, scheduler_micro,
-                            symbolic_coverage, table1_dynamic_training)
+    from benchmarks import (memplan_bench, remat_sweep, roofline,
+                            scheduler_micro, symbolic_coverage,
+                            table1_dynamic_training)
 
     # paper Table 1: dynamic vs static vs BladeDISC++ training
     rows = _timed(
@@ -53,6 +57,17 @@ def main() -> None:
                f"{r['arch']}:{100*r['symbolic_frac']:.0f}%"
                f"->{100*r['symbolic_frac_bounded']:.0f}%"
                for r in rs))
+
+    # memory planner: logical peak vs planned arena vs guaranteed bound
+    rows = _timed(
+        "memplan", lambda: memplan_bench.run(smoke=args.fast),
+        lambda rs: ";".join(
+            f"{r['arch']}:{r['arena_bytes'][-1]/r['peak_bytes'][-1]:.2f}"
+            f"x reuse{100*r['reuse_ratio']:.0f}%"
+            for r in rs))
+    with open("BENCH_memplan.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(memplan_bench.format_rows(rows), file=sys.stderr)
 
     # roofline readout from the dry-run artifacts (if present)
     try:

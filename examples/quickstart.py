@@ -77,3 +77,15 @@ print(f"declared 1<=b<=8, s<=256: guaranteed peak <= "
 x = jnp.asarray(rng.randn(8, 256, D), jnp.float32)
 opt_b(ws, x)
 assert opt_b.last_report.stats.device_peak <= opt_b.guaranteed_peak_bytes
+
+# 6. Memory planner (memory_plan="arena", on by default): compile-time
+#    buffer reuse over symbolic liveness.  Every run draws from a planned
+#    arena — never bigger than the free-run peak — and with bounded dims
+#    the arena size itself has a compile-time guarantee.
+st = opt_b.last_report.stats
+print(f"memory planner: arena={st.arena_bytes/2**20:.2f} MiB "
+      f"(<= peak {st.device_peak/2**20:.2f} MiB) across {st.slots} slots, "
+      f"reuse_ratio={st.reuse_ratio:.2f}, "
+      f"guaranteed arena <= {opt_b.arena_bound_bytes/2**20:.2f} MiB")
+assert st.arena_bytes <= st.device_peak
+assert st.arena_bytes <= opt_b.arena_bound_bytes

@@ -19,6 +19,7 @@ from jax import export, tree_util
 
 from .executor.interpreter import PlanInterpreter, RunReport
 from .ir.trace import trace_to_graph
+from .memplan import ArenaPlan, build_arena_plan
 from .remat.planner import ExecutionPlan, build_plan
 from .scheduling.memsim import simulate_peak, simulate_peak_bound
 from .scheduling.scheduler import ScheduleResult, schedule_graph
@@ -47,6 +48,12 @@ class OptimizeReport:
     # (None when some dim has no declared upper bound)
     peak_bound_bytes: Optional[int] = None
     peak_bound_lo: Optional[int] = None
+    # memory planner (memory_plan="arena"): guaranteed worst-case arena
+    # size over the declared dim ranges, slot count, planned reuse split
+    arena_bound_bytes: Optional[int] = None
+    n_arena_slots: int = 0
+    n_provable_reuses: int = 0
+    n_checked_reuses: int = 0
 
 
 class DynamicShapeFunction:
@@ -85,6 +92,16 @@ class DynamicShapeFunction:
         """
         return self.report.peak_bound_bytes
 
+    @property
+    def arena_plan(self) -> Optional["ArenaPlan"]:
+        return self.plan.arena_plan
+
+    @property
+    def arena_bound_bytes(self) -> Optional[int]:
+        """Compile-time worst-case planned arena size over the declared dim
+        ranges (``None`` without ``memory_plan="arena"`` + bounded dims)."""
+        return self.report.arena_bound_bytes
+
     # reconfigure without retracing
     def with_memory_limit(self, limit: Optional[int]) -> "DynamicShapeFunction":
         return DynamicShapeFunction(self.plan, self._in_tree, self._out_tree,
@@ -106,6 +123,7 @@ def optimize(
     count_inputs: bool = True,
     max_subgraph: int = 24,
     guard_env: Optional[Dict[str, int]] = None,
+    memory_plan: str = "arena",
     **example_kwargs,
 ) -> DynamicShapeFunction:
     """Trace ``fn`` symbolically and build the optimized dynamic-shape plan.
@@ -120,7 +138,14 @@ def optimize(
     order does not regress peak memory vs the original program order
     (best-of safeguard); defaults to all dims = 64, clamped into the
     declared ranges.
+    ``memory_plan``: ``"arena"`` (default) runs the symbolic memory
+    planner — compile-time buffer-reuse slots + a runtime arena whose
+    stats land on ``last_report.stats`` (``arena_bytes``, ``slots``,
+    ``reuse_ratio``, ``fragmentation_bytes``); ``"none"`` disables it.
     """
+    if memory_plan not in ("arena", "none"):
+        raise ValueError(
+            f"memory_plan must be 'arena' or 'none', got {memory_plan!r}")
     graph, _ = trace_to_graph(fn, *example_args, **example_kwargs)
     sg = shape_graph if shape_graph is not None else ShapeGraph()
     if dynamic_dims:
@@ -155,24 +180,29 @@ def optimize(
         base = simulate_peak(graph, graph.nodes, env, count_inputs=count_inputs)
         tuned = simulate_peak(graph, sched.order, env, count_inputs=count_inputs)
         used_sched = tuned.peak_bytes <= base.peak_bytes
+        kept_peak = min(tuned.peak_bytes, base.peak_bytes)
         if not used_sched:  # keep the better order (never regress)
             sched = ScheduleResult(list(graph.nodes), sched.symbolic_decisions,
                                    sched.tiebreak_decisions)
-        # pairwise-exchange refinement (beyond-paper; guarded at probe envs)
+        # pairwise-exchange refinement (beyond-paper; guarded at probe envs);
+        # the kept order's peak is already known — only the refined order
+        # needs a fresh simulation
         from .scheduling.exchange import exchange_pass
         refined = exchange_pass(graph, sched.order, probe_envs)
         if simulate_peak(graph, refined, env,
-                         count_inputs=count_inputs).peak_bytes <= \
-                simulate_peak(graph, sched.order, env,
-                              count_inputs=count_inputs).peak_bytes:
+                         count_inputs=count_inputs).peak_bytes <= kept_peak:
             sched = ScheduleResult(refined, sched.symbolic_decisions,
                                    sched.tiebreak_decisions)
     else:
         sched = ScheduleResult(list(graph.nodes), 0, 0)
         used_sched = False
 
+    arena_plan = None
+    if memory_plan == "arena":
+        arena_plan = build_arena_plan(graph, sched.order, sg,
+                                      donate_inputs=donate_inputs)
     plan = build_plan(graph, sched, sg, enable_remat=enable_remat,
-                      max_subgraph=max_subgraph)
+                      max_subgraph=max_subgraph, arena_plan=arena_plan)
     peak_lo = peak_hi = None
     if sg.declared_ranges:  # without ranges the bound is vacuous (hi = None)
         peak_lo, peak_hi = simulate_peak_bound(graph, sched.order, sg,
@@ -185,6 +215,12 @@ def optimize(
                             n_static_regen=plan.n_static_regen,
                             peak_bound_bytes=peak_hi,
                             peak_bound_lo=peak_lo)
+    if arena_plan is not None:
+        # None whenever some live dim has no declared upper bound
+        report.arena_bound_bytes = arena_plan.arena_bound_bytes
+        report.n_arena_slots = arena_plan.n_slots
+        report.n_provable_reuses = arena_plan.n_provable_reuses
+        report.n_checked_reuses = arena_plan.n_checked_reuses
 
     flat, in_tree = tree_util.tree_flatten((example_args, example_kwargs))
     out_shapes = jax.eval_shape(fn, *example_args, **example_kwargs)

@@ -25,6 +25,7 @@ import numpy as np
 
 from ..ir.graph import Graph, Node, Value
 from ..ir.trace import refine_params, solve_env
+from ..memplan.arena import ArenaAllocator
 from ..remat.planner import ExecutionPlan
 from ..remat.runtime import RuntimeRematPolicy
 from .memory import MemoryManager, MemoryStats
@@ -83,7 +84,6 @@ class PlanInterpreter:
                 raise ValueError(
                     f"dim {name!r}={v} outside its declared range {iv}; "
                     f"re-optimize with wider dynamic_dims to run this shape")
-        mm = MemoryManager(self.memory_limit)
         policy = RuntimeRematPolicy(plan, env)
         env_key = tuple(sorted(env.items()))
         nbytes = self._size_cache.setdefault(env_key, {})
@@ -93,6 +93,13 @@ class PlanInterpreter:
             self._params_cache.clear()
             nbytes = self._size_cache.setdefault(env_key, {})
             refined = self._params_cache.setdefault(env_key, {})
+        arena = None
+        if plan.arena_plan is not None:
+            # symbolic slot sizes evaluate + carve once per env (cached
+            # inside the plan, like the size/params caches above)
+            arena = ArenaAllocator(plan.arena_plan,
+                                   plan.arena_plan.resolve(env))
+        mm = MemoryManager(self.memory_limit, arena=arena)
 
         def bytes_of(v: Value) -> int:
             b = nbytes.get(v.id)
@@ -132,6 +139,9 @@ class PlanInterpreter:
                 evicted_recompute.discard(vid)
                 if was_tracked and (self.count_inputs or not v.is_materialized_input()):
                     mm.free(vid)
+                elif was_tracked:
+                    # uncounted donated input: still release its arena slot
+                    mm.arena_release(vid)
 
         # -- eviction callback wired into the memory manager ------------------
         def evict(need: int) -> int:
@@ -168,12 +178,18 @@ class PlanInterpreter:
         mm.evict_callback = evict
 
         # -- registration of inputs & consts ---------------------------------
+        # caller-provided buffers occupy external arena slots (registered
+        # before mm.alloc so the arena does not treat them as fresh allocs)
         for val, arr in zip(g.inputs, flat_args):
             storage[val.id] = arr
+            if arena is not None:
+                arena.place_external(val.id, bytes_of(val))
             if self.count_inputs:
                 mm.alloc(val.id, bytes_of(val))
         for val in g.consts:
             storage[val.id] = val.const_val
+            if arena is not None:
+                arena.place_external(val.id, bytes_of(val))
             if self.count_inputs:
                 mm.alloc(val.id, bytes_of(val))
 
@@ -251,5 +267,7 @@ class PlanInterpreter:
                 maybe_free(iv.id)
 
         outputs = [materialize(v) for v in g.outputs]
+        if arena is not None:
+            arena.write_stats(mm.stats)
         wall = time.perf_counter() - t0
         return outputs, RunReport(stats=mm.stats, wall_s=wall, env=env)

@@ -28,6 +28,13 @@ class MemoryStats:
     recomputes: int = 0
     recompute_flops: int = 0
     offloads: int = 0
+    # arena-plan counters (zero when running with memory_plan="none")
+    arena_bytes: int = 0          # arena size for this env, growth included
+    slots: int = 0                # arena-allocated slots (external excluded)
+    reuse_ratio: float = 0.0      # allocations served by a reused buffer
+    fragmentation_bytes: int = 0  # arena size - peak bytes in use at once
+    arena_growth_bytes: int = 0   # checked-reuse / dynamic growth beyond plan
+    donated_reuses: int = 0       # allocations landing in donated input slots
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
@@ -41,12 +48,25 @@ class MemoryManager:
     allocation fits (or raises).
     """
 
-    def __init__(self, limit_bytes: Optional[int] = None):
+    def __init__(self, limit_bytes: Optional[int] = None, arena=None):
         self.limit = limit_bytes
         self.stats = MemoryStats()
         self._device: Dict[int, int] = {}  # value id -> bytes
         self._host: Dict[int, int] = {}
         self.evict_callback: Optional[Callable[[int], int]] = None
+        # optional ArenaAllocator mirroring device residency through the
+        # planned slots (every device alloc/free below notifies it)
+        self.arena = arena
+
+    def _arena_alloc(self, vid: int, nbytes: int) -> None:
+        if self.arena is not None:
+            self.arena.alloc(vid, nbytes)
+
+    def arena_release(self, vid: int) -> None:
+        """Arena-only free for buffers this manager never counted
+        (e.g. donated inputs under ``count_inputs=False``)."""
+        if self.arena is not None:
+            self.arena.free(vid)
 
     # -- residency queries -----------------------------------------------------
     def on_device(self, vid: int) -> bool:
@@ -77,11 +97,13 @@ class MemoryManager:
         self._device[vid] = nbytes
         self.stats.device_used += nbytes
         self.stats.device_peak = max(self.stats.device_peak, self.stats.device_used)
+        self._arena_alloc(vid, nbytes)
 
     def free(self, vid: int) -> None:
         b = self._device.pop(vid, None)
         if b is not None:
             self.stats.device_used -= b
+            self.arena_release(vid)
         hb = self._host.pop(vid, None)
         if hb is not None:
             self.stats.host_used -= hb
@@ -96,6 +118,7 @@ class MemoryManager:
         self.stats.evictions += 1
         self.stats.evicted_bytes += b
         self.stats.offloads += 1
+        self.arena_release(vid)
 
     def evict_drop(self, vid: int) -> None:
         """Eviction with recompute regeneration: bytes simply drop."""
@@ -103,6 +126,7 @@ class MemoryManager:
         self.stats.device_used -= b
         self.stats.evictions += 1
         self.stats.evicted_bytes += b
+        self.arena_release(vid)
 
     def reload(self, vid: int) -> None:
         b = self._host.pop(vid)
@@ -111,6 +135,7 @@ class MemoryManager:
         self.stats.device_used += b
         self.stats.device_peak = max(self.stats.device_peak, self.stats.device_used)
         self.stats.reloads += 1
+        self._arena_alloc(vid, b)
 
     def restore(self, vid: int, nbytes: int) -> None:
         """Re-allocation after recompute regeneration."""
@@ -118,3 +143,4 @@ class MemoryManager:
         self.stats.device_used += nbytes
         self.stats.device_peak = max(self.stats.device_peak, self.stats.device_used)
         self.stats.recomputes += 1
+        self._arena_alloc(vid, nbytes)

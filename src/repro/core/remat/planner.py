@@ -9,12 +9,15 @@ candidate tensor (realised as the interpreter's materialize-on-demand).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
 
 from ..ir.graph import Graph, Node
 from ..scheduling.scheduler import ScheduleResult
 from ..symbolic import ShapeGraph
 from .search import CandidateInfo, RecomputeSearcher, static_regen_method
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..memplan.assign import ArenaPlan
 
 
 @dataclass
@@ -31,6 +34,8 @@ class ExecutionPlan:
     # value id -> regen method fixed at compile time by interval bounds
     # ('recompute' | 'offload'); absent keys stay env-dependent at runtime
     static_methods: Dict[int, str] = field(default_factory=dict)
+    # compile-time buffer-reuse plan (None with memory_plan="none")
+    arena_plan: Optional["ArenaPlan"] = None
 
     def __post_init__(self):
         self.node_by_id = {n.id: n for n in self.graph.nodes}
@@ -68,11 +73,13 @@ class ExecutionPlan:
 def build_plan(graph: Graph, schedule: ScheduleResult,
                shape_graph: Optional[ShapeGraph] = None,
                *, enable_remat: bool = True,
-               max_subgraph: int = 24) -> ExecutionPlan:
+               max_subgraph: int = 24,
+               arena_plan: Optional["ArenaPlan"] = None) -> ExecutionPlan:
     sg = shape_graph if shape_graph is not None else ShapeGraph()
     candidates: Dict[int, CandidateInfo] = {}
     if enable_remat:
         searcher = RecomputeSearcher(graph, sg, max_subgraph=max_subgraph)
         candidates = searcher.explore(schedule.order)
     return ExecutionPlan(graph=graph, order=list(schedule.order),
-                         shape_graph=sg, candidates=candidates)
+                         shape_graph=sg, candidates=candidates,
+                         arena_plan=arena_plan)
