@@ -1,0 +1,155 @@
+"""Per-bucket plan cache (dispatch stage 2).
+
+``SpecializationTable`` maps bucket keys to compiled :class:`BucketPlan`s —
+each one a full schedule → remat → memplan pipeline run under the bucket's
+tighter bound env.  Compilation is **lazy**: a bucket specializes the first
+time traffic lands in it (or through an explicit synchronous
+``warmup(envs)``), and the table retains at most ``max_live`` plans with
+LRU eviction — an evicted bucket recompiles on its next use, it does not
+error.  The hit path is a dict probe after the O(log n) per-dim key
+lookup: it never re-runs scheduling, remat search, or memory planning.
+
+The table also answers ``arena_bound_bytes(key)`` — the bucket plan's
+guaranteed worst-case arena size over the bucket's sub-ranges — which the
+serving path uses for admission control by bucket (see
+``repro.launch.serve.BucketBatcher``).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
+                    Tuple)
+
+from ..symbolic.intervals import Interval
+from .buckets import BucketSpace
+
+BucketKey = Tuple[int, ...]
+
+
+@dataclass
+class BucketPlan:
+    """One bucket's compiled artifact: plan + report + ready interpreter."""
+
+    key: BucketKey
+    ranges: Dict[str, Interval]       # the sub-ranges this plan assumes
+    plan: Any                         # ExecutionPlan
+    report: Any                       # OptimizeReport for this bucket
+    interp: Any                       # PlanInterpreter bound to ``plan``
+
+    @property
+    def arena_bound_bytes(self) -> Optional[int]:
+        return self.report.arena_bound_bytes
+
+
+class SpecializationTable:
+    """Lazy bucket-key -> BucketPlan cache with LRU retention.
+
+    ``compile_fn(key, ranges)`` runs the full pipeline for one bucket and
+    returns a :class:`BucketPlan`; the table owns laziness, retention, and
+    the dispatch counters (``hits``/``misses``/``specialize_count``/
+    ``evictions``).  ``specialize_count`` counts *compilations* — it grows
+    on first use and on recompilation after LRU eviction, never on a hit.
+    """
+
+    def __init__(self, space: BucketSpace,
+                 compile_fn: Callable[[BucketKey, Dict[str, Interval]],
+                                      BucketPlan],
+                 *, max_live: int = 16):
+        if max_live < 1:
+            raise ValueError(f"max_live must be >= 1, got {max_live}")
+        self.space = space
+        self.max_live = max_live
+        self._compile_fn = compile_fn
+        self._plans: "OrderedDict[BucketKey, BucketPlan]" = OrderedDict()
+        # bounds survive plan eviction: once a bucket has compiled, its
+        # guaranteed arena bound is a fact about the bucket, not the cache —
+        # admission control must not recompile (or evict a hot plan) to
+        # re-learn it
+        self._bounds: Dict[BucketKey, Optional[int]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.specialize_count = 0
+        self.evictions = 0
+
+    # -- dispatch --------------------------------------------------------------
+    def key_of(self, env: Mapping[str, int]) -> BucketKey:
+        return self.space.key_of(env)
+
+    def lookup(self, env: Mapping[str, int]) -> Tuple[BucketPlan, bool]:
+        """Dispatch an env: ``(plan, hit)``.  Miss compiles the bucket."""
+        key = self.space.key_of(env)
+        bp = self._plans.get(key)
+        if bp is not None:
+            self.hits += 1
+            self._plans.move_to_end(key)
+            return bp, True
+        self.misses += 1
+        return self._specialize(key), False
+
+    def get(self, key: BucketKey) -> BucketPlan:
+        """Plan for a bucket key, compiling if needed (no hit/miss stats)."""
+        bp = self._plans.get(key)
+        if bp is not None:
+            self._plans.move_to_end(key)
+            return bp
+        return self._specialize(key)
+
+    def peek(self, key: BucketKey) -> Optional[BucketPlan]:
+        """Cached plan or ``None`` — never compiles, never reorders LRU."""
+        return self._plans.get(key)
+
+    def _specialize(self, key: BucketKey) -> BucketPlan:
+        bp = self._compile_fn(key, self.space.ranges_of(key))
+        self.specialize_count += 1
+        self._bounds[key] = bp.arena_bound_bytes
+        self._plans[key] = bp
+        while len(self._plans) > self.max_live:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+        return bp
+
+    # -- warmup & introspection ------------------------------------------------
+    def warmup(self, envs: Iterable[Mapping[str, int]]) -> List[BucketKey]:
+        """Compile the buckets containing ``envs`` before traffic arrives.
+
+        Synchronous and idempotent (already-compiled buckets are skipped);
+        returns the distinct bucket keys now resident, in first-seen order.
+        """
+        keys: List[BucketKey] = []
+        for env in envs:
+            key = self.space.key_of(env)
+            if key not in keys:
+                keys.append(key)
+                self.get(key)
+        return keys
+
+    def arena_bound_bytes(self, key: BucketKey) -> Optional[int]:
+        """Guaranteed worst-case arena size over the bucket's sub-ranges.
+
+        Bounds are remembered across LRU eviction, so only a bucket never
+        compiled before pays a pipeline run here; a known bucket answers
+        from the bound cache without touching (or evicting from) the plan
+        cache."""
+        if key in self._bounds:
+            return self._bounds[key]
+        return self.get(key).arena_bound_bytes
+
+    @property
+    def compiled_keys(self) -> List[BucketKey]:
+        return list(self._plans)
+
+    @property
+    def n_buckets(self) -> int:
+        return self.space.n_buckets
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "specialize_count": self.specialize_count,
+                "evictions": self.evictions,
+                "resident": len(self._plans)}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"SpecializationTable({self.space!r}, "
+                f"resident={len(self._plans)}/{self.max_live}, "
+                f"hits={self.hits}, specializations={self.specialize_count})")

@@ -1,7 +1,11 @@
-"""Batched decode server loop: prefill + token-by-token generation.
+"""Batched decode server loop + bucket-aware request batching.
 
-Demonstrates the serving path of every architecture (KV caches for
-transformers, latent caches for MLA, recurrent states for SSM/xLSTM).
+``serve`` demonstrates the decode path of every architecture (KV caches
+for transformers, latent caches for MLA, recurrent states for SSM/xLSTM).
+``BucketBatcher`` is the shape-bucketed serving front end: it groups
+queued requests by specialization bucket before dispatch, so one
+specialized plan serves each group and admission control can reason in
+per-bucket guaranteed arena bounds.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
         --batch 4 --prompt-len 32 --gen 16
@@ -10,6 +14,9 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +24,100 @@ import numpy as np
 
 from ..configs import get_config, get_smoke_config
 from ..models import decode_step, forward, init_cache, init_params
+
+
+# -- bucket-aware batching -----------------------------------------------------
+
+
+@dataclass
+class BucketGroup:
+    """One drained batch: same-bucket requests dispatched together."""
+
+    key: Tuple[int, ...]
+    label: str                               # human-readable bucket ranges
+    envs: List[Dict[str, int]]
+    payloads: List[Any]
+    # guaranteed worst-case arena size of the bucket's plan (None when the
+    # bucket has an unbounded dim or memory_plan="none")
+    arena_bound_bytes: Optional[int] = None
+
+    def __len__(self) -> int:
+        return len(self.envs)
+
+
+class BucketBatcher:
+    """Groups queued requests into specialization buckets before dispatch.
+
+    Serving traffic is shape-diverse; dispatching each request alone makes
+    every shape a fresh arena resolve, and dispatching mixed shapes in
+    arrival order ping-pongs between bucket plans.  The batcher instead
+    queues ``(env, payload)`` requests, keyed by the bucket the env lands
+    in (same O(log n) lookup the call path uses), and ``drain()`` returns
+    same-bucket groups, largest first.
+
+    ``memory_budget`` enables admission control by bucket: a group whose
+    bucket plan carries ``arena_bound_bytes`` above the budget stays
+    queued (the bound is a *guarantee* — any request in the bucket fits
+    under it), so the server can run small-shape traffic while deferring
+    heavy buckets to a bigger worker or an off-peak window.
+    """
+
+    def __init__(self, fn, *, memory_budget: Optional[int] = None):
+        table = getattr(fn, "specialization_table", None)
+        if table is None:
+            raise ValueError(
+                "BucketBatcher requires a bucketed function — build it with "
+                "optimize(..., dynamic_dims=..., buckets=...)")
+        self.fn = fn
+        self.table = table
+        self.memory_budget = memory_budget
+        # bucket key -> queued (env, payload), FIFO within a bucket
+        self._queue: "OrderedDict[Tuple[int, ...], List[Tuple[Dict[str, int], Any]]]" = OrderedDict()
+
+    def submit(self, env: Mapping[str, int], payload: Any = None) -> Tuple[int, ...]:
+        """Queue one request; returns the bucket key it grouped under.
+
+        An env outside the declared ranges raises here — at intake, where
+        the client error belongs — rather than mid-drain after the group
+        was admitted under a bucket bound the request does not satisfy.
+        """
+        key = self.table.key_of(env)
+        self._queue.setdefault(key, []).append((dict(env), payload))
+        return key
+
+    def pending(self) -> int:
+        return sum(len(reqs) for reqs in self._queue.values())
+
+    def pending_by_bucket(self) -> Dict[Tuple[int, ...], int]:
+        return {key: len(reqs) for key, reqs in self._queue.items()}
+
+    def drain(self) -> List[BucketGroup]:
+        """Admitted same-bucket groups, largest first; held groups remain.
+
+        A group is held when ``memory_budget`` is set and the bucket's
+        guaranteed arena bound exceeds it.  Admission asks the table for
+        the bound, which compiles a bucket the *first* time it is ever
+        seen (bounds are then remembered across plan eviction, so held
+        buckets are not recompiled drain after drain); use
+        ``fn.warmup(envs)`` beforehand to move even that first compile off
+        the serving path.
+        """
+        admitted: List[BucketGroup] = []
+        held: "OrderedDict[Tuple[int, ...], List[Tuple[Dict[str, int], Any]]]" = OrderedDict()
+        order = sorted(self._queue, key=lambda k: -len(self._queue[k]))
+        for key in order:
+            reqs = self._queue[key]
+            bound = self.table.arena_bound_bytes(key)
+            if self.memory_budget is not None and bound is not None \
+                    and bound > self.memory_budget:
+                held[key] = reqs
+                continue
+            admitted.append(BucketGroup(
+                key=key, label=self.table.space.describe(key),
+                envs=[e for e, _ in reqs], payloads=[p for _, p in reqs],
+                arena_bound_bytes=bound))
+        self._queue = held
+        return admitted
 
 
 def serve(cfg, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,

@@ -1,0 +1,364 @@
+"""Shape-bucketed plan specialization & dispatch.
+
+Covers the partition itself (geometric coverage, deterministic edge
+dispatch), the SpecializationTable (lazy compile, LRU eviction +
+recompile, hit path never re-planning), the per-bucket specialization
+gain (cmp_stats symbolic fraction and arena_bound_bytes no worse than the
+whole-range plan, strictly better on the small bucket), correctness of
+dispatched execution, and the serve-path bucket batcher.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import optimize, symbolic_dims
+from repro.core.dispatch import (BucketSpace, DimBuckets, SpecializationTable,
+                                 build_bucket_space)
+from repro.core.symbolic import Interval, ShapeGraph, declare_dim_ranges
+from repro.launch.serve import BucketBatcher
+
+B, S = symbolic_dims("b, s")
+V, D, F = 300, 32, 64
+
+
+def loss_fn(params, tokens, labels):
+    emb = params["emb"][tokens]
+    h = jax.nn.gelu(emb @ params["w1"])
+    h2 = h @ params["w2"]
+    logits = h2 @ params["emb"].T
+    logp = jax.nn.log_softmax(logits)
+    oh = jax.nn.one_hot(labels, logits.shape[-1])
+    return -(oh * logp).sum() / (1.0 * tokens.shape[0] * tokens.shape[1])
+
+
+def train_step(params, tokens, labels):
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+    return loss, jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+
+
+def specs():
+    p = {"emb": jax.ShapeDtypeStruct((V, D), jnp.float32),
+         "w1": jax.ShapeDtypeStruct((D, F), jnp.float32),
+         "w2": jax.ShapeDtypeStruct((F, D), jnp.float32)}
+    t = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return p, t, t
+
+
+def concrete_params(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"emb": jnp.asarray(rng.randn(V, D), jnp.float32),
+            "w1": jnp.asarray(rng.randn(D, F) * 0.05, jnp.float32),
+            "w2": jnp.asarray(rng.randn(F, D) * 0.05, jnp.float32)}
+
+
+def tokens_of(b, s, seed=1):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, V, (b, s)), jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def bucketed_fn():
+    return optimize(train_step, *specs(),
+                    dynamic_dims={"b": (1, 16), "s": (8, 256)},
+                    buckets={"s": [32, 64]})
+
+
+# -- the partition ------------------------------------------------------------
+
+
+class TestBucketSpace:
+    def test_geometric_partition_covers_range_contiguously(self):
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"b": (1, 64), "s": (16, 4096)})
+        space = build_bucket_space(sg.declared_ranges, "geometric")
+        s_dim = next(d for d in space.dims if d.name == "s")
+        assert s_dim.n == 4 and s_dim.uppers[-1] == 4096
+        lo = 16
+        for i in range(s_dim.n):
+            iv = s_dim.range_of(i)
+            assert iv.lo == lo            # contiguous, no gap and no overlap
+            lo = iv.hi + 1
+        # every in-range value lands in the bucket whose range contains it
+        for v in [16, 63, 64, 65, 1000, 4096]:
+            assert s_dim.range_of(s_dim.index_of(v)).contains(v)
+
+    def test_edge_value_dispatches_to_lower_bucket(self):
+        d = DimBuckets("s", 16, (64, 256, 1024))
+        assert d.index_of(64) == 0        # edges are inclusive upper bounds
+        assert d.index_of(65) == 1
+        assert d.index_of(256) == 1
+        assert d.index_of(257) == 2
+        assert d.index_of(16) == 0
+
+    def test_explicit_edges_and_unbucketed_dims(self):
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"b": (1, 16), "s": (8, 256)})
+        space = build_bucket_space(sg.declared_ranges, {"s": [32, 64]})
+        assert space.dim_names == ("b", "s")
+        assert space.n_buckets == 3       # b keeps a single bucket
+        assert space.key_of({"b": 5, "s": 32}) == (0, 0)
+        assert space.key_of({"b": 5, "s": 33}) == (0, 1)
+        ranges = space.ranges_of((0, 2))
+        assert ranges["s"] == Interval(65, 256)
+        assert ranges["b"] == Interval(1, 16)
+
+    def test_open_range_gets_open_final_bucket(self):
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"s": ">=4"})
+        space = build_bucket_space(sg.declared_ranges, {"s": [64]})
+        s_dim = space.dims[0]
+        assert s_dim.uppers == (64, None)
+        assert s_dim.index_of(10_000_000) == 1
+        assert space.ranges_of((1,))["s"] == Interval(65, None)
+
+    def test_out_of_partition_value_raises_not_clamps(self):
+        d = DimBuckets("s", 16, (64, 256, 1024))
+        with pytest.raises(ValueError, match="outside the bucketed range"):
+            d.index_of(15)                # below lo
+        with pytest.raises(ValueError, match="outside the bucketed range"):
+            d.index_of(1025)              # above the final edge
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"b": (1, 16), "s": (8, 256)})
+        space = build_bucket_space(sg.declared_ranges, {"s": [32]})
+        with pytest.raises(ValueError, match="outside the bucketed range"):
+            space.key_of({"b": 2, "s": 5000})
+
+    def test_bad_specs_raise(self):
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"s": (8, 256)})
+        with pytest.raises(ValueError):
+            build_bucket_space({}, "geometric")       # no declared ranges
+        with pytest.raises(ValueError):
+            build_bucket_space(sg.declared_ranges, {"nope": 4})
+        with pytest.raises(ValueError):               # single bucket is no-op
+            build_bucket_space(sg.declared_ranges, 1)
+        with pytest.raises(ValueError):               # unbounded + geometric
+            sg2 = ShapeGraph()
+            declare_dim_ranges(sg2, {"s": ">=4"})
+            build_bucket_space(sg2.declared_ranges, 4)
+
+
+# -- specialization gain ------------------------------------------------------
+
+
+class TestSpecializationGain:
+    def test_per_bucket_no_worse_than_whole_range(self, bucketed_fn):
+        fn = bucketed_fn
+        mono = fn.report
+        table = fn.specialization_table
+        assert mono.arena_bound_bytes is not None
+        small_bounds = []
+        for key in table.space.keys():
+            bp = table.get(key)
+            # tighter bounds can only resolve more comparisons
+            assert bp.report.cmp_symbolic_fraction >= \
+                mono.cmp_symbolic_fraction
+            # and the bucket's guaranteed arena never exceeds whole-range
+            assert bp.arena_bound_bytes <= mono.arena_bound_bytes
+            small_bounds.append(bp.arena_bound_bytes)
+        # the small-shape bucket is *strictly* cheaper — the whole point
+        assert min(small_bounds) < mono.arena_bound_bytes
+
+    def test_per_bucket_peak_bound_tightens(self, bucketed_fn):
+        table = bucketed_fn.specialization_table
+        bounds = [table.get(k).report.peak_bound_bytes
+                  for k in table.space.keys()]
+        assert all(b is not None for b in bounds)
+        assert min(bounds) < bucketed_fn.report.peak_bound_bytes
+        assert max(bounds) <= bucketed_fn.report.peak_bound_bytes
+
+
+# -- dispatch behaviour -------------------------------------------------------
+
+
+class TestDispatch:
+    def test_call_dispatches_and_matches_reference(self, bucketed_fn):
+        fn = bucketed_fn
+        cp = concrete_params()
+        for (b, s), key in [((2, 16), (0, 0)), ((2, 48), (0, 1)),
+                            ((1, 200), (0, 2))]:
+            tok = tokens_of(b, s)
+            loss, _ = fn(cp, tok, tok)
+            assert fn.last_bucket == key
+            ref_loss, _ = train_step(cp, tok, tok)
+            np.testing.assert_allclose(np.asarray(loss), np.asarray(ref_loss),
+                                       rtol=2e-5)
+
+    def test_boundary_env_dispatch_is_deterministic(self, bucketed_fn):
+        fn = bucketed_fn
+        cp = concrete_params()
+        tok = tokens_of(2, 32)            # exactly on the first edge
+        for _ in range(2):
+            fn(cp, tok, tok)
+            assert fn.last_bucket == (0, 0)   # inclusive edge: lower bucket
+        tok = tokens_of(2, 33)
+        fn(cp, tok, tok)
+        assert fn.last_bucket == (0, 1)
+
+    def test_hit_path_never_replans(self):
+        fn = optimize(train_step, *specs(),
+                      dynamic_dims={"b": (1, 16), "s": (8, 256)},
+                      buckets={"s": [64]})
+        table = fn.specialization_table
+        cp = concrete_params()
+        tok = tokens_of(2, 16)
+        fn(cp, tok, tok)
+        assert table.specialize_count == 1 and table.hits == 0
+        plan_before = table.peek(fn.last_bucket).plan
+        for i in range(3):                # repeated same-bucket traffic
+            loss, _ = fn(cp, tok, tok)
+            st = fn.last_report.stats
+            assert st.specialize_count == 1       # no re-planning on hits
+            assert st.bucket_hits == i + 1
+            assert st.dispatch_ns > 0
+        assert table.peek(fn.last_bucket).plan is plan_before
+
+    def test_lru_eviction_and_recompile(self):
+        fn = optimize(train_step, *specs(),
+                      dynamic_dims={"b": (1, 16), "s": (8, 256)},
+                      buckets={"s": [16, 32, 64]},   # 4 buckets
+                      max_cached_plans=2)
+        table = fn.specialization_table
+        cp = concrete_params()
+        fn(cp, tokens_of(2, 12), tokens_of(2, 12))     # bucket 0
+        fn(cp, tokens_of(2, 30), tokens_of(2, 30))     # bucket 1
+        fn(cp, tokens_of(2, 60), tokens_of(2, 60))     # bucket 2 -> evicts 0
+        assert table.specialize_count == 3
+        assert table.evictions == 1
+        assert table.peek((0, 0)) is None              # bucket 0 gone
+        assert len(table.compiled_keys) == 2
+        loss, _ = fn(cp, tokens_of(2, 12), tokens_of(2, 12))  # recompile 0
+        assert table.specialize_count == 4
+        ref, _ = train_step(cp, tokens_of(2, 12), tokens_of(2, 12))
+        np.testing.assert_allclose(np.asarray(loss), np.asarray(ref),
+                                   rtol=2e-5)
+
+    def test_bounds_survive_plan_eviction(self):
+        fn = optimize(train_step, *specs(),
+                      dynamic_dims={"b": (1, 16), "s": (8, 256)},
+                      buckets={"s": [16, 32, 64]},
+                      max_cached_plans=2)
+        table = fn.specialization_table
+        bound0 = table.arena_bound_bytes((0, 0))     # compiles bucket 0
+        table.get((0, 1))
+        table.get((0, 2))                            # evicts bucket 0's plan
+        assert table.peek((0, 0)) is None
+        spec = table.specialize_count
+        # the bound is still known — answered without recompiling
+        assert table.arena_bound_bytes((0, 0)) == bound0
+        assert table.specialize_count == spec
+
+    def test_warmup_precompiles_so_first_call_hits(self):
+        fn = optimize(train_step, *specs(),
+                      dynamic_dims={"b": (1, 16), "s": (8, 256)},
+                      buckets={"s": [64]})
+        keys = fn.warmup([{"b": 2, "s": 16}, {"b": 4, "s": 20},
+                          {"b": 2, "s": 100}])
+        assert keys == [(0, 0), (0, 1)]   # deduped, first-seen order
+        table = fn.specialization_table
+        assert table.specialize_count == 2 and table.hits == 0
+        cp = concrete_params()
+        fn(cp, tokens_of(2, 16), tokens_of(2, 16))
+        assert table.hits == 1 and table.specialize_count == 2
+
+    def test_out_of_range_env_raises_before_dispatch(self, bucketed_fn):
+        cp = concrete_params()
+        tok = tokens_of(2, 300)           # s beyond the declared 256
+        with pytest.raises(ValueError, match="declared range"):
+            bucketed_fn(cp, tok, tok)
+
+    def test_unbucketed_function_has_no_table(self):
+        fn = optimize(train_step, *specs(),
+                      dynamic_dims={"b": (1, 16), "s": (8, 256)})
+        assert fn.specialization_table is None
+        with pytest.raises(ValueError, match="buckets"):
+            fn.warmup([{"b": 2, "s": 16}])
+
+    def test_buckets_require_dynamic_dims(self):
+        with pytest.raises(ValueError, match="dynamic_dims"):
+            optimize(train_step, *specs(), buckets="geometric")
+
+    def test_with_memory_limit_keeps_bucketing(self, bucketed_fn):
+        capped = bucketed_fn.with_memory_limit(512 << 20)
+        assert capped.specialization_table is not None
+        cp = concrete_params()
+        tok = tokens_of(2, 16)
+        loss, _ = capped(cp, tok, tok)
+        assert capped.last_bucket == (0, 0)
+        ref, _ = train_step(cp, tok, tok)
+        np.testing.assert_allclose(np.asarray(loss), np.asarray(ref),
+                                   rtol=2e-5)
+
+
+# -- the serve path -----------------------------------------------------------
+
+
+class TestBucketBatcher:
+    def test_groups_same_bucket_requests(self, bucketed_fn):
+        batcher = BucketBatcher(bucketed_fn)
+        for s in [16, 40, 16, 200, 24]:
+            batcher.submit({"b": 2, "s": s}, payload=s)
+        assert batcher.pending() == 5
+        groups = batcher.drain()
+        assert batcher.pending() == 0
+        by_key = {g.key: g for g in groups}
+        assert sorted(by_key) == [(0, 0), (0, 1), (0, 2)]
+        assert sorted(by_key[(0, 0)].payloads) == [16, 16, 24]
+        assert by_key[(0, 1)].payloads == [40]
+        assert by_key[(0, 2)].payloads == [200]
+        # largest group drains first
+        assert groups[0].key == (0, 0)
+
+    def test_admission_control_holds_heavy_buckets(self, bucketed_fn):
+        table = bucketed_fn.specialization_table
+        small = table.arena_bound_bytes((0, 0))
+        big = table.arena_bound_bytes((0, 2))
+        assert small < big
+        batcher = BucketBatcher(bucketed_fn, memory_budget=(small + big) // 2)
+        batcher.submit({"b": 2, "s": 16}, payload="small")
+        batcher.submit({"b": 2, "s": 200}, payload="big")
+        groups = batcher.drain()
+        assert [g.payloads for g in groups] == [["small"]]
+        assert batcher.pending() == 1     # heavy bucket held, not dropped
+        assert batcher.pending_by_bucket() == {(0, 2): 1}
+        # raising the budget releases it
+        batcher.memory_budget = big
+        groups = batcher.drain()
+        assert [g.payloads for g in groups] == [["big"]]
+        assert batcher.pending() == 0
+
+    def test_group_bound_is_the_bucket_guarantee(self, bucketed_fn):
+        batcher = BucketBatcher(bucketed_fn)
+        batcher.submit({"b": 2, "s": 16})
+        (group,) = batcher.drain()
+        table = bucketed_fn.specialization_table
+        assert group.arena_bound_bytes == table.arena_bound_bytes((0, 0))
+
+    def test_requires_bucketed_function(self):
+        fn = optimize(train_step, *specs(),
+                      dynamic_dims={"b": (1, 16), "s": (8, 256)})
+        with pytest.raises(ValueError, match="buckets"):
+            BucketBatcher(fn)
+
+    def test_submit_rejects_out_of_range_env_at_intake(self, bucketed_fn):
+        batcher = BucketBatcher(bucketed_fn)
+        with pytest.raises(ValueError, match="outside the bucketed range"):
+            batcher.submit({"b": 2, "s": 5000})
+        assert batcher.pending() == 0
+        with pytest.raises(ValueError, match="outside the bucketed range"):
+            bucketed_fn.warmup([{"b": 2, "s": 5000}])
+
+    def test_repeated_drains_do_not_recompile_held_buckets(self):
+        fn = optimize(train_step, *specs(),
+                      dynamic_dims={"b": (1, 16), "s": (8, 256)},
+                      buckets={"s": [64]})
+        table = fn.specialization_table
+        big = table.arena_bound_bytes((0, 1))
+        batcher = BucketBatcher(fn, memory_budget=big - 1)
+        batcher.submit({"b": 2, "s": 200})
+        spec = table.specialize_count
+        for _ in range(3):                # held, not recompiled per drain
+            assert batcher.drain() == []
+            assert batcher.pending() == 1
+        assert table.specialize_count == spec

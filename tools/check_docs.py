@@ -1,0 +1,154 @@
+"""Docs hygiene gate (CI): snippets run, links resolve, API is covered.
+
+Three checks, all on by default (each can run alone with its flag):
+
+* ``--snippets`` — extract the fenced ```python blocks of ``docs/api.md``
+  and execute them **in order in one shared namespace** (doctest-style:
+  early blocks set up state later blocks use).  A block whose first line
+  is ``# doc: skip`` is extracted but not executed (reserved for
+  illustrative fragments); everything else must run.
+* ``--links`` — over ``docs/*.md`` and ``README.md``: every relative
+  markdown link ``[text](target)`` must resolve to an existing file, and
+  every backticked file reference (``benchmarks/run.py``,
+  ``memplan/arena.py``, ...) must match an existing repo file by path
+  suffix — so renaming or deleting a module flags every doc that still
+  names it.
+* ``--coverage`` — every public symbol in ``repro.core.api.__all__``
+  appears in ``docs/api.md``.
+
+Exit status is non-zero on any failure; failures are listed, not just the
+first.
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import traceback
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+API_DOC = REPO / "docs" / "api.md"
+DOC_FILES = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+SNIPPET_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backticked tokens that look like repo file paths
+FILE_REF_RE = re.compile(r"`([\w./-]+\.(?:py|md|json|yml|yaml|toml))`")
+
+
+def extract_snippets(path: Path) -> List[Tuple[int, str]]:
+    """(starting line number, code) for each ```python block, in order."""
+    text = path.read_text()
+    out = []
+    for m in SNIPPET_RE.finditer(text):
+        line = text.count("\n", 0, m.start()) + 2   # first line inside fence
+        out.append((line, m.group(1)))
+    return out
+
+
+def check_snippets() -> List[str]:
+    if not API_DOC.exists():
+        return [f"{API_DOC} missing"]
+    errors = []
+    namespace: Dict = {"__name__": "__docs__"}
+    snippets = extract_snippets(API_DOC)
+    if not snippets:
+        return [f"{API_DOC}: no ```python snippets found"]
+    ran = 0
+    for line, code in snippets:
+        first = code.lstrip().splitlines()[0] if code.strip() else ""
+        if first.startswith("# doc: skip"):
+            continue
+        try:
+            exec(compile(code, f"{API_DOC.name}:{line}", "exec"), namespace)
+            ran += 1
+        except Exception:
+            tb = traceback.format_exc(limit=2)
+            errors.append(
+                f"{API_DOC.relative_to(REPO)}:{line}: snippet raised\n{tb}")
+    if not errors:
+        print(f"[snippets] {ran} ran, "
+              f"{len(snippets) - ran} skipped — OK")
+    return errors
+
+
+def _repo_files() -> List[str]:
+    skip_parts = {".git", "__pycache__", ".pytest_cache"}
+    return ["/" + p.relative_to(REPO).as_posix()
+            for p in REPO.rglob("*") if p.is_file()
+            and not skip_parts & set(p.parts)]
+
+
+def check_links() -> List[str]:
+    errors = []
+    repo_files = _repo_files()
+    n_links = n_refs = 0
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        rel = doc.relative_to(REPO)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            n_links += 1
+            if not (doc.parent / path).exists():
+                line = text.count("\n", 0, m.start()) + 1
+                errors.append(f"{rel}:{line}: dead link -> {target}")
+        for m in FILE_REF_RE.finditer(text):
+            ref = m.group(1)
+            if ref.startswith("."):        # e.g. `.github/...` handled below
+                ref = ref.lstrip("./")
+            n_refs += 1
+            if not any(f.endswith("/" + ref) for f in repo_files):
+                line = text.count("\n", 0, m.start()) + 1
+                errors.append(f"{rel}:{line}: dead file reference `{ref}`")
+    if not errors:
+        print(f"[links] {n_links} links + {n_refs} file references — OK")
+    return errors
+
+
+def check_coverage() -> List[str]:
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core import api
+    text = API_DOC.read_text() if API_DOC.exists() else ""
+    missing = [name for name in api.__all__ if name not in text]
+    if missing:
+        return [f"docs/api.md misses public api symbols: {missing}"]
+    print(f"[coverage] all {len(api.__all__)} repro.core.api symbols "
+          f"documented — OK")
+    return []
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snippets", action="store_true")
+    ap.add_argument("--links", action="store_true")
+    ap.add_argument("--coverage", action="store_true")
+    args = ap.parse_args()
+    run_all = not (args.snippets or args.links or args.coverage)
+
+    errors: List[str] = []
+    if run_all or args.links:
+        errors += check_links()
+    if run_all or args.coverage:
+        errors += check_coverage()
+    if run_all or args.snippets:
+        errors += check_snippets()
+
+    if errors:
+        print(f"\n{len(errors)} docs-hygiene failure(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        raise SystemExit(1)
+    print("docs hygiene: all checks passed")
+
+
+if __name__ == "__main__":
+    main()
