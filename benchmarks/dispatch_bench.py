@@ -1,0 +1,150 @@
+"""Dispatch benchmark: per-call bucket-dispatch overhead + bucketed vs
+monolithic guaranteed memory, across the 4 benchmark archs.
+
+For each arch, ``optimize`` the train step once with symbolic ``(b, s)``
+over ``b ∈ [1, 64]``, ``s ∈ [16, 4096]`` and sequence-length buckets, then
+measure:
+
+  * ``mono_arena_bound`` / ``mono_peak_bound`` — the whole-range plan's
+    guaranteed arena / peak bytes (what a bucket-less deployment must
+    provision for *every* request);
+  * per bucket: the specialized plan's ``arena_bound_bytes`` /
+    ``peak_bound_bytes`` and its ``cmp_stats`` symbolic fraction;
+  * ``dispatch_p50_ns`` — median hit-path dispatch cost (bucket-key bisect
+    + table probe), measured over repeated lookups of a resident bucket.
+
+Asserted invariants (the dispatch contract):
+
+  * at least one bucket's ``arena_bound_bytes`` is strictly below the
+    whole-range bound on every arch — specialization pays somewhere;
+  * no bucket's bound exceeds the whole-range bound — it never loses;
+  * the hit path never re-plans: ``specialize_count`` is unchanged by
+    repeated lookups of already-compiled buckets.
+
+    PYTHONPATH=src python -m benchmarks.dispatch_bench [--smoke] [--json F]
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import optimize
+
+from benchmarks.memplan_bench import _step_and_specs
+
+ARCHS = ["llama2_1b", "gemma_2b", "granite_8b", "musicgen_medium"]
+SMOKE_ARCHS = ["llama2_1b", "musicgen_medium"]   # both input modes
+
+BATCH_RANGE = (1, 64)
+SEQ_RANGE = (16, 4096)
+BUCKET_EDGES = {"s": [64, 512]}          # s: [16,64] [65,512] [513,4096]
+SMOKE_BUCKET_EDGES = {"s": [512]}        # s: [16,512] [513,4096]
+N_LOOKUPS = 2000
+
+
+def _dispatch_p50_ns(table, env: Dict[str, int], n: int = N_LOOKUPS) -> int:
+    """Median wall time of the hit path: key bisect + LRU probe."""
+    table.get(table.key_of(env))         # make the bucket resident
+    samples = []
+    for _ in range(n):
+        t0 = time.perf_counter_ns()
+        _, hit = table.lookup(env)
+        samples.append(time.perf_counter_ns() - t0)
+        assert hit, "dispatch bench env unexpectedly missed its bucket"
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    archs = SMOKE_ARCHS if smoke else ARCHS
+    edges = SMOKE_BUCKET_EDGES if smoke else BUCKET_EDGES
+    rows = []
+    for arch in archs:
+        r = _step_and_specs(arch)
+        if r is None:
+            continue
+        step, args = r
+        fn = optimize(step, *args,
+                      dynamic_dims={"b": BATCH_RANGE, "s": SEQ_RANGE},
+                      buckets=edges)
+        table = fn.specialization_table
+        mono = fn.report
+
+        buckets = []
+        for key in table.space.keys():
+            bp = table.get(key)
+            buckets.append(dict(
+                key=list(key), label=table.space.describe(key),
+                arena_bound_bytes=bp.arena_bound_bytes,
+                peak_bound_bytes=bp.report.peak_bound_bytes,
+                cmp_symbolic_fraction=round(
+                    bp.report.cmp_symbolic_fraction, 4),
+            ))
+        spec_before = table.specialize_count
+
+        b_bounds = [b["arena_bound_bytes"] for b in buckets]
+        assert min(b_bounds) < mono.arena_bound_bytes, \
+            f"{arch}: no bucket beats the whole-range arena bound"
+        assert max(b_bounds) <= mono.arena_bound_bytes, \
+            f"{arch}: a bucket's bound exceeds the whole-range bound"
+
+        # hit-path overhead in each bucket, via a representative env
+        p50s = []
+        for key in table.space.keys():
+            ranges = table.space.ranges_of(key)
+            env = {name: iv.lo for name, iv in ranges.items()}
+            p50s.append(_dispatch_p50_ns(table, env))
+        assert table.specialize_count == spec_before, \
+            f"{arch}: cached-bucket dispatch re-ran the pipeline"
+
+        rows.append(dict(
+            arch=arch,
+            n_buckets=table.n_buckets,
+            mono_arena_bound=mono.arena_bound_bytes,
+            mono_peak_bound=mono.peak_bound_bytes,
+            mono_cmp_symbolic_fraction=round(mono.cmp_symbolic_fraction, 4),
+            buckets=buckets,
+            min_bucket_over_mono=round(
+                min(b_bounds) / mono.arena_bound_bytes, 4),
+            dispatch_p50_ns=max(p50s),
+            specialize_count=table.specialize_count,
+        ))
+    return rows
+
+
+def format_rows(rows: List[Dict]) -> str:
+    out = []
+    for r in rows:
+        out.append(
+            f"{r['arch']:18s} mono arena<= {r['mono_arena_bound']/2**20:9.1f}"
+            f"MiB  symfrac={100*r['mono_cmp_symbolic_fraction']:.1f}%  "
+            f"dispatch p50={r['dispatch_p50_ns']/1e3:.1f}us")
+        for b in r["buckets"]:
+            frac = b["arena_bound_bytes"] / r["mono_arena_bound"]
+            out.append(
+                f"    {b['label']:24s} arena<= "
+                f"{b['arena_bound_bytes']/2**20:9.1f}MiB ({frac:6.1%})  "
+                f"symfrac={100*b['cmp_symbolic_fraction']:.1f}%")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="two archs, two buckets (CI)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write rows as JSON")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print(format_rows(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,12 @@ PROBE_ENVS = [(1, 16), (8, 512), (64, 4096)]
 SMOKE_PROBE_ENVS = [(1, 16), (8, 512)]
 
 
-def _trace(arch):
+def _step_and_specs(arch):
+    """Train step + symbolic ``(b, s)`` example specs for one bench arch.
+
+    Shared with ``dispatch_bench`` (which feeds them to ``optimize``);
+    returns ``None`` for input modes the bench does not model.
+    """
     cfg = dataclasses.replace(get_smoke_config(arch), scan_layers=False)
     step = make_train_step(cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -67,7 +72,15 @@ def _trace(arch):
                                                 jnp.int32)}
     else:
         return None
-    g, _ = trace_to_graph(step, p, o, batch)
+    return step, (p, o, batch)
+
+
+def _trace(arch):
+    r = _step_and_specs(arch)
+    if r is None:
+        return None
+    step, args = r
+    g, _ = trace_to_graph(step, *args)
     return g
 
 

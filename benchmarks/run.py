@@ -1,8 +1,10 @@
 """Benchmark harness: one entry per paper table + framework benches.
 
 Prints ``name,us_per_call,derived`` CSV lines per the repo convention and
-writes ``BENCH_memplan.json`` (peak/arena/bound per arch) so the memory
-planner's trajectory is machine-trackable across PRs.
+writes ``BENCH_memplan.json`` (peak/arena/bound per arch) and
+``BENCH_dispatch.json`` (bucketed vs monolithic bounds, dispatch overhead)
+so the planner's and dispatcher's trajectories are machine-trackable
+across PRs.
     PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 import argparse
@@ -26,8 +28,8 @@ def main() -> None:
     args = ap.parse_args()
     steps = 6 if args.fast else 12
 
-    from benchmarks import (memplan_bench, remat_sweep, roofline,
-                            scheduler_micro, symbolic_coverage,
+    from benchmarks import (dispatch_bench, memplan_bench, remat_sweep,
+                            roofline, scheduler_micro, symbolic_coverage,
                             table1_dynamic_training)
 
     # paper Table 1: dynamic vs static vs BladeDISC++ training
@@ -68,6 +70,18 @@ def main() -> None:
     with open("BENCH_memplan.json", "w") as f:
         json.dump({"rows": rows}, f, indent=2)
     print(memplan_bench.format_rows(rows), file=sys.stderr)
+
+    # shape-bucketed dispatch: bucketed vs monolithic guaranteed memory +
+    # per-call dispatch overhead (hit path never re-plans — asserted inside)
+    rows = _timed(
+        "dispatch", lambda: dispatch_bench.run(smoke=args.fast),
+        lambda rs: ";".join(
+            f"{r['arch']}:{r['min_bucket_over_mono']:.2f}x"
+            f"@{r['dispatch_p50_ns']/1e3:.0f}us"
+            for r in rs))
+    with open("BENCH_dispatch.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(dispatch_bench.format_rows(rows), file=sys.stderr)
 
     # roofline readout from the dry-run artifacts (if present)
     try:

@@ -5,6 +5,11 @@ The paper's primary contribution lives here: symbolic shape analysis
 (``repro.core.scheduling``), rematerialization (``repro.core.remat``), and
 the runtime (``repro.core.executor``), wired together by :func:`optimize`.
 """
-from .api import DynamicShapeFunction, OptimizeReport, optimize, symbolic_dim, symbolic_dims
+from .api import (BucketPlan, BucketSpace, DynamicShapeFunction,
+                  OptimizeReport, SpecializationTable, build_bucket_space,
+                  optimize, symbolic_dim, symbolic_dims)
 
-__all__ = ["DynamicShapeFunction", "OptimizeReport", "optimize", "symbolic_dim", "symbolic_dims"]
+__all__ = ["DynamicShapeFunction", "OptimizeReport", "optimize",
+           "symbolic_dim", "symbolic_dims",
+           "BucketSpace", "SpecializationTable", "BucketPlan",
+           "build_bucket_space"]

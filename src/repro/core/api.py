@@ -6,24 +6,41 @@
 
 ``optimize`` performs the paper's full pipeline once at "compile" time:
 symbolic trace → symbolic shape graph → op scheduling (§2.2) → remat
-planning (§2.3 compile half).  Calls then execute through the runtime
-interpreter (§2.3 runtime half) under an optional memory limit.
+planning (§2.3 compile half) → memory planning.  Calls then execute
+through the runtime interpreter (§2.3 runtime half) under an optional
+memory limit.
+
+With ``buckets=...`` the declared shape space is additionally partitioned
+into buckets and the schedule → remat → memplan pipeline re-runs lazily
+once per bucket under the bucket's tighter bounds; each call dispatches to
+its bucket's plan in O(log n) per dim through a :class:`SpecializationTable`
+with LRU retention.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, \
+    Sequence, Tuple
 
 import jax
 from jax import export, tree_util
 
+from .dispatch import BucketKey, BucketPlan, BucketSpace, BucketsSpec, \
+    SpecializationTable, build_bucket_space
 from .executor.interpreter import PlanInterpreter, RunReport
-from .ir.trace import trace_to_graph
+from .ir.trace import solve_env, trace_to_graph
 from .memplan import ArenaPlan, build_arena_plan
 from .remat.planner import ExecutionPlan, build_plan
 from .scheduling.memsim import simulate_peak, simulate_peak_bound
 from .scheduling.scheduler import ScheduleResult, schedule_graph
 from .symbolic import ShapeGraph, declare_dim_ranges
+
+__all__ = [
+    "optimize", "DynamicShapeFunction", "OptimizeReport",
+    "symbolic_dim", "symbolic_dims",
+    "BucketSpace", "SpecializationTable", "BucketPlan", "build_bucket_space",
+]
 
 
 def symbolic_dim(name: str):
@@ -54,108 +71,39 @@ class OptimizeReport:
     n_arena_slots: int = 0
     n_provable_reuses: int = 0
     n_checked_reuses: int = 0
-
-
-class DynamicShapeFunction:
-    """A compiled-once, run-any-shape callable with memory optimization."""
-
-    def __init__(self, plan: ExecutionPlan, in_tree, out_tree,
-                 report: OptimizeReport, *,
-                 memory_limit: Optional[int] = None,
-                 donate_inputs: bool = False,
-                 count_inputs: bool = True):
-        self.plan = plan
-        self._in_tree = in_tree
-        self._out_tree = out_tree
-        self.report = report
-        self.interp = PlanInterpreter(plan, memory_limit=memory_limit,
-                                      donate_inputs=donate_inputs,
-                                      count_inputs=count_inputs)
-        self.last_report: Optional[RunReport] = None
-
-    def __call__(self, *args, **kwargs):
-        flat, in_tree = tree_util.tree_flatten((args, kwargs))
-        if in_tree != self._in_tree:
-            raise TypeError(
-                f"pytree structure mismatch: traced {self._in_tree}, got {in_tree}")
-        outs, report = self.interp.run(flat)
-        self.last_report = report
-        return tree_util.tree_unflatten(self._out_tree, outs)
+    # snapshot of ShapeGraph.cmp_stats after this compile: how many symbolic
+    # comparisons resolved by constant difference / interval separation /
+    # not at all (per-bucket reports show the specialization gain)
+    cmp_stats: Dict[str, int] = field(default_factory=dict)
+    # the bucket partition (whole-range report only; None without buckets=)
+    buckets: Optional[BucketSpace] = None
 
     @property
-    def guaranteed_peak_bytes(self) -> Optional[int]:
-        """Compile-time worst-case peak over the declared dim ranges.
-
-        ``None`` unless every symbolic dim was given an upper bound via
-        ``optimize(..., dynamic_dims=...)``.  For every call whose dims lie
-        within the declared ranges, the free-run device peak is <= this.
-        """
-        return self.report.peak_bound_bytes
-
-    @property
-    def arena_plan(self) -> Optional["ArenaPlan"]:
-        return self.plan.arena_plan
-
-    @property
-    def arena_bound_bytes(self) -> Optional[int]:
-        """Compile-time worst-case planned arena size over the declared dim
-        ranges (``None`` without ``memory_plan="arena"`` + bounded dims)."""
-        return self.report.arena_bound_bytes
-
-    # reconfigure without retracing
-    def with_memory_limit(self, limit: Optional[int]) -> "DynamicShapeFunction":
-        return DynamicShapeFunction(self.plan, self._in_tree, self._out_tree,
-                                    self.report,
-                                    memory_limit=limit,
-                                    donate_inputs=self.interp.donate_inputs,
-                                    count_inputs=self.interp.count_inputs)
+    def cmp_symbolic_fraction(self) -> float:
+        """Fraction of comparisons resolved (constant or interval layer)."""
+        total = sum(self.cmp_stats.values())
+        if not total:
+            return 1.0
+        return 1.0 - self.cmp_stats.get("unknown", 0) / total
 
 
-def optimize(
-    fn: Callable,
-    *example_args,
-    shape_graph: Optional[ShapeGraph] = None,
-    dynamic_dims: Optional[Dict[str, Any]] = None,
+def _compile_pipeline(
+    graph, sg: ShapeGraph, *,
     enable_scheduling: bool = True,
     enable_remat: bool = True,
-    memory_limit: Optional[int] = None,
+    memory_plan: str = "arena",
     donate_inputs: bool = False,
     count_inputs: bool = True,
     max_subgraph: int = 24,
     guard_env: Optional[Dict[str, int]] = None,
-    memory_plan: str = "arena",
-    **example_kwargs,
-) -> DynamicShapeFunction:
-    """Trace ``fn`` symbolically and build the optimized dynamic-shape plan.
+) -> Tuple[ExecutionPlan, OptimizeReport]:
+    """schedule → remat → memplan over an already-traced graph.
 
-    ``example_args``: ShapeDtypeStructs (shapes may contain symbolic dims
-    from :func:`symbolic_dim`).  ``dynamic_dims``: declared ranges per
-    symbolic dim name — e.g. ``{"b": (1, 64), "s": "<=4096"}`` (see
-    :func:`repro.core.symbolic.parse_range_spec`) — feeding the interval
-    fallback of symbolic comparisons; with every dim bounded above, the
-    report carries a guaranteed worst-case peak (``peak_bound_bytes``).
-    ``guard_env``: representative dim binding used to verify the scheduled
-    order does not regress peak memory vs the original program order
-    (best-of safeguard); defaults to all dims = 64, clamped into the
-    declared ranges.
-    ``memory_plan``: ``"arena"`` (default) runs the symbolic memory
-    planner — compile-time buffer-reuse slots + a runtime arena whose
-    stats land on ``last_report.stats`` (``arena_bytes``, ``slots``,
-    ``reuse_ratio``, ``fragmentation_bytes``); ``"none"`` disables it.
+    The compile-time half of :func:`optimize`, factored out so bucketed
+    specialization can re-run it per bucket: the same graph compiles under
+    a narrowed ``ShapeGraph`` (see :meth:`ShapeGraph.specialized`) and the
+    tighter bounds resolve more decisions statically.
     """
-    if memory_plan not in ("arena", "none"):
-        raise ValueError(
-            f"memory_plan must be 'arena' or 'none', got {memory_plan!r}")
-    graph, _ = trace_to_graph(fn, *example_args, **example_kwargs)
-    sg = shape_graph if shape_graph is not None else ShapeGraph()
-    if dynamic_dims:
-        known = graph.free_symbols()
-        unknown = sorted(set(dynamic_dims) - known)
-        if unknown:
-            raise ValueError(
-                f"dynamic_dims names {unknown} are not symbolic dims of the "
-                f"traced function (known: {sorted(known)})")
-    declare_dim_ranges(sg, dynamic_dims)
 
     def _clamp(name: str, v: int) -> int:
         iv = sg.declared_ranges.get(name)
@@ -214,18 +162,225 @@ def optimize(
                             used_scheduled_order=used_sched,
                             n_static_regen=plan.n_static_regen,
                             peak_bound_bytes=peak_hi,
-                            peak_bound_lo=peak_lo)
+                            peak_bound_lo=peak_lo,
+                            cmp_stats=dict(sg.cmp_stats))
     if arena_plan is not None:
         # None whenever some live dim has no declared upper bound
         report.arena_bound_bytes = arena_plan.arena_bound_bytes
         report.n_arena_slots = arena_plan.n_slots
         report.n_provable_reuses = arena_plan.n_provable_reuses
         report.n_checked_reuses = arena_plan.n_checked_reuses
+    return plan, report
+
+
+class DynamicShapeFunction:
+    """A compiled-once, run-any-shape callable with memory optimization."""
+
+    def __init__(self, plan: ExecutionPlan, in_tree, out_tree,
+                 report: OptimizeReport, *,
+                 memory_limit: Optional[int] = None,
+                 donate_inputs: bool = False,
+                 count_inputs: bool = True,
+                 table: Optional[SpecializationTable] = None,
+                 table_factory: Optional[
+                     Callable[[Optional[int]], SpecializationTable]] = None):
+        self.plan = plan
+        self._in_tree = in_tree
+        self._out_tree = out_tree
+        self.report = report
+        self.interp = PlanInterpreter(plan, memory_limit=memory_limit,
+                                      donate_inputs=donate_inputs,
+                                      count_inputs=count_inputs)
+        self.last_report: Optional[RunReport] = None
+        self._table = table
+        self._table_factory = table_factory
+        # bucket key the most recent call dispatched to (None: monolithic)
+        self.last_bucket: Optional[BucketKey] = None
+
+    def __call__(self, *args, **kwargs):
+        flat, in_tree = tree_util.tree_flatten((args, kwargs))
+        if in_tree != self._in_tree:
+            raise TypeError(
+                f"pytree structure mismatch: traced {self._in_tree}, got {in_tree}")
+        if self._table is None:
+            outs, report = self.interp.run(flat)
+        else:
+            t0 = time.perf_counter_ns()
+            env = solve_env(self.plan.graph, flat)
+            self._check_declared(env)
+            bp, _hit = self._table.lookup(env)
+            dispatch_ns = time.perf_counter_ns() - t0
+            # env is solved + validated once, here; the interpreter trusts it
+            outs, report = bp.interp.run(flat, env=env)
+            self.last_bucket = bp.key
+            report.stats.dispatch_ns = dispatch_ns
+            report.stats.bucket_hits = self._table.hits
+            report.stats.specialize_count = self._table.specialize_count
+        self.last_report = report
+        return tree_util.tree_unflatten(self._out_tree, outs)
+
+    def _check_declared(self, env: Dict[str, int]) -> None:
+        """Declared-range contract check against the *whole-range* graph —
+        before bucket dispatch, so an out-of-range dim cannot land in an
+        edge bucket and fail there with a misleading sub-range message."""
+        for name, iv in self.plan.shape_graph.declared_ranges.items():
+            v = env.get(name)
+            if v is not None and not iv.contains(v):
+                raise ValueError(
+                    f"dim {name!r}={v} outside its declared range {iv}; "
+                    f"re-optimize with wider dynamic_dims to run this shape")
+
+    # -- bucketed specialization ------------------------------------------------
+    @property
+    def specialization_table(self) -> Optional[SpecializationTable]:
+        """The per-bucket plan cache (``None`` without ``buckets=...``)."""
+        return self._table
+
+    def warmup(self, envs: Iterable[Mapping[str, int]]) -> List[BucketKey]:
+        """Compile the buckets containing ``envs`` before serving traffic.
+
+        Synchronous, idempotent, runs nothing — it only specializes plans
+        so first-request latency does not pay the compile.  ``envs`` is an
+        iterable of dim bindings (a single mapping is also accepted);
+        returns the distinct bucket keys now resident.
+        """
+        if self._table is None:
+            raise ValueError(
+                "warmup() requires bucketed dispatch — pass "
+                "optimize(..., buckets=...)")
+        if isinstance(envs, Mapping):
+            envs = [envs]
+        return self._table.warmup(envs)
+
+    @property
+    def guaranteed_peak_bytes(self) -> Optional[int]:
+        """Compile-time worst-case peak over the declared dim ranges.
+
+        ``None`` unless every symbolic dim was given an upper bound via
+        ``optimize(..., dynamic_dims=...)``.  For every call whose dims lie
+        within the declared ranges, the free-run device peak is <= this.
+        """
+        return self.report.peak_bound_bytes
+
+    @property
+    def arena_plan(self) -> Optional["ArenaPlan"]:
+        return self.plan.arena_plan
+
+    @property
+    def arena_bound_bytes(self) -> Optional[int]:
+        """Compile-time worst-case planned arena size over the declared dim
+        ranges (``None`` without ``memory_plan="arena"`` + bounded dims).
+        Per-bucket bounds are tighter: see
+        ``specialization_table.arena_bound_bytes(key)``."""
+        return self.report.arena_bound_bytes
+
+    # reconfigure without retracing
+    def with_memory_limit(self, limit: Optional[int]) -> "DynamicShapeFunction":
+        table = self._table_factory(limit) if self._table_factory else None
+        return DynamicShapeFunction(self.plan, self._in_tree, self._out_tree,
+                                    self.report,
+                                    memory_limit=limit,
+                                    donate_inputs=self.interp.donate_inputs,
+                                    count_inputs=self.interp.count_inputs,
+                                    table=table,
+                                    table_factory=self._table_factory)
+
+
+def optimize(
+    fn: Callable,
+    *example_args,
+    shape_graph: Optional[ShapeGraph] = None,
+    dynamic_dims: Optional[Dict[str, Any]] = None,
+    enable_scheduling: bool = True,
+    enable_remat: bool = True,
+    memory_limit: Optional[int] = None,
+    donate_inputs: bool = False,
+    count_inputs: bool = True,
+    max_subgraph: int = 24,
+    guard_env: Optional[Dict[str, int]] = None,
+    memory_plan: str = "arena",
+    buckets: Optional[BucketsSpec] = None,
+    max_cached_plans: int = 16,
+    **example_kwargs,
+) -> DynamicShapeFunction:
+    """Trace ``fn`` symbolically and build the optimized dynamic-shape plan.
+
+    ``example_args``: ShapeDtypeStructs (shapes may contain symbolic dims
+    from :func:`symbolic_dim`).  ``dynamic_dims``: declared ranges per
+    symbolic dim name — e.g. ``{"b": (1, 64), "s": "<=4096"}`` (see
+    :func:`repro.core.symbolic.parse_range_spec`) — feeding the interval
+    fallback of symbolic comparisons; with every dim bounded above, the
+    report carries a guaranteed worst-case peak (``peak_bound_bytes``).
+    ``guard_env``: representative dim binding used to verify the scheduled
+    order does not regress peak memory vs the original program order
+    (best-of safeguard); defaults to all dims = 64, clamped into the
+    declared ranges.
+    ``memory_plan``: ``"arena"`` (default) runs the symbolic memory
+    planner — compile-time buffer-reuse slots + a runtime arena whose
+    stats land on ``last_report.stats`` (``arena_bytes``, ``slots``,
+    ``reuse_ratio``, ``fragmentation_bytes``); ``"none"`` disables it.
+    ``buckets``: partition the declared ranges into shape buckets and
+    specialize the whole pipeline per bucket — ``"geometric"`` / an int
+    count / a per-dim mapping ``{dim: count | [edges...]}`` (see
+    :func:`repro.core.dispatch.build_bucket_space`); requires
+    ``dynamic_dims``.  Calls dispatch to their bucket's plan; buckets
+    compile lazily on first use (or via :meth:`DynamicShapeFunction.warmup`)
+    and at most ``max_cached_plans`` stay resident (LRU).
+    """
+    if memory_plan not in ("arena", "none"):
+        raise ValueError(
+            f"memory_plan must be 'arena' or 'none', got {memory_plan!r}")
+    graph, _ = trace_to_graph(fn, *example_args, **example_kwargs)
+    sg = shape_graph if shape_graph is not None else ShapeGraph()
+    if dynamic_dims:
+        known = graph.free_symbols()
+        unknown = sorted(set(dynamic_dims) - known)
+        if unknown:
+            raise ValueError(
+                f"dynamic_dims names {unknown} are not symbolic dims of the "
+                f"traced function (known: {sorted(known)})")
+    declare_dim_ranges(sg, dynamic_dims)
+
+    knobs = dict(enable_scheduling=enable_scheduling,
+                 enable_remat=enable_remat,
+                 memory_plan=memory_plan,
+                 donate_inputs=donate_inputs,
+                 count_inputs=count_inputs,
+                 max_subgraph=max_subgraph,
+                 guard_env=guard_env)
+    plan, report = _compile_pipeline(graph, sg, **knobs)
+
+    table_factory = None
+    if buckets is not None:
+        space = build_bucket_space(sg.declared_ranges, buckets)
+        report.buckets = space
+        # one shared per-env cache pair across every bucket interpreter:
+        # plan swap between buckets re-derives no sizes/params
+        size_cache: Dict[Tuple, Dict[int, int]] = {}
+        params_cache: Dict[Tuple, Dict[int, Dict[str, Any]]] = {}
+
+        def table_factory(limit: Optional[int],
+                          _space=space) -> SpecializationTable:
+            def compile_bucket(key, ranges) -> BucketPlan:
+                sub_sg = sg.specialized(ranges)
+                b_plan, b_report = _compile_pipeline(graph, sub_sg, **knobs)
+                interp = PlanInterpreter(b_plan, memory_limit=limit,
+                                         donate_inputs=donate_inputs,
+                                         count_inputs=count_inputs,
+                                         size_cache=size_cache,
+                                         params_cache=params_cache)
+                return BucketPlan(key=key, ranges=ranges, plan=b_plan,
+                                  report=b_report, interp=interp)
+            return SpecializationTable(_space, compile_bucket,
+                                       max_live=max_cached_plans)
 
     flat, in_tree = tree_util.tree_flatten((example_args, example_kwargs))
     out_shapes = jax.eval_shape(fn, *example_args, **example_kwargs)
     _, out_tree = tree_util.tree_flatten(out_shapes)
-    return DynamicShapeFunction(plan, in_tree, out_tree, report,
-                                memory_limit=memory_limit,
-                                donate_inputs=donate_inputs,
-                                count_inputs=count_inputs)
+    return DynamicShapeFunction(
+        plan, in_tree, out_tree, report,
+        memory_limit=memory_limit,
+        donate_inputs=donate_inputs,
+        count_inputs=count_inputs,
+        table=table_factory(memory_limit) if table_factory else None,
+        table_factory=table_factory)

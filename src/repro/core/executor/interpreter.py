@@ -55,7 +55,10 @@ class PlanInterpreter:
     def __init__(self, plan: ExecutionPlan, *,
                  memory_limit: Optional[int] = None,
                  donate_inputs: bool = False,
-                 count_inputs: bool = True):
+                 count_inputs: bool = True,
+                 size_cache: Optional[Dict[Tuple, Dict[int, int]]] = None,
+                 params_cache: Optional[
+                     Dict[Tuple, Dict[int, Dict[str, Any]]]] = None):
         self.plan = plan
         self.g = plan.graph
         self.memory_limit = memory_limit
@@ -67,23 +70,32 @@ class PlanInterpreter:
             v.id: len([c for c in v.consumers if c.id in plan.pos])
             for v in self.g.values
         }
-        # per-env caches reused across calls (training repeats shapes)
-        self._size_cache: Dict[Tuple, Dict[int, int]] = {}
-        self._params_cache: Dict[Tuple, Dict[int, Dict[str, Any]]] = {}
+        # per-env caches reused across calls (training repeats shapes).
+        # Both depend only on graph + env — never on the op order — so
+        # bucketed dispatch passes one shared pair to every per-bucket
+        # interpreter: swapping plans between calls re-derives nothing.
+        self._size_cache: Dict[Tuple, Dict[int, int]] = \
+            size_cache if size_cache is not None else {}
+        self._params_cache: Dict[Tuple, Dict[int, Dict[str, Any]]] = \
+            params_cache if params_cache is not None else {}
 
     # ---------------------------------------------------------------- run --
-    def run(self, flat_args: Sequence[Any]) -> Tuple[List[Any], RunReport]:
+    def run(self, flat_args: Sequence[Any],
+            env: Optional[Dict[str, int]] = None) -> Tuple[List[Any], RunReport]:
         t0 = time.perf_counter()
         g, plan = self.g, self.plan
-        env = solve_env(g, flat_args)
-        # declared dim ranges are a contract: compile-time decisions
-        # (schedule, static regen methods, guaranteed peak) assume them
-        for name, iv in plan.shape_graph.declared_ranges.items():
-            v = env.get(name)
-            if v is not None and not iv.contains(v):
-                raise ValueError(
-                    f"dim {name!r}={v} outside its declared range {iv}; "
-                    f"re-optimize with wider dynamic_dims to run this shape")
+        if env is None:
+            env = solve_env(g, flat_args)
+            # declared dim ranges are a contract: compile-time decisions
+            # (schedule, static regen methods, guaranteed peak) assume them.
+            # A caller passing a pre-solved env (the bucketed dispatch hot
+            # path) has already validated it and skips both steps.
+            for name, iv in plan.shape_graph.declared_ranges.items():
+                v = env.get(name)
+                if v is not None and not iv.contains(v):
+                    raise ValueError(
+                        f"dim {name!r}={v} outside its declared range {iv}; "
+                        f"re-optimize with wider dynamic_dims to run this shape")
         policy = RuntimeRematPolicy(plan, env)
         env_key = tuple(sorted(env.items()))
         nbytes = self._size_cache.setdefault(env_key, {})

@@ -23,7 +23,7 @@ import enum
 from typing import Dict, Mapping, Optional, Tuple
 
 from .expr import Atom, AtomT, ExprLike, OpAtom, SymbolicExpr
-from .intervals import BoundEnv, Interval, RangeLike
+from .intervals import BoundEnv, Interval, RangeLike, as_interval
 
 
 class Cmp(enum.Enum):
@@ -156,6 +156,34 @@ class ShapeGraph:
 
     def definitely_negative(self, e: ExprLike) -> bool:
         return self.compare(e, 0) is Cmp.LT
+
+    # -- specialization ---------------------------------------------------------
+    def specialized(self, ranges: Mapping[str, RangeLike]) -> "ShapeGraph":
+        """A copy with ``ranges`` *narrowing* the declared dim ranges.
+
+        Equalities and all declared ranges carry over; each dim named in
+        ``ranges`` is met (intersected) with its existing declaration, so
+        the result never widens what the original graph promised.  This is
+        what bucketed plan specialization runs the compile-time pipeline
+        under: a tighter ``BoundEnv`` resolves interval comparisons the
+        whole-range graph could not.  ``cmp_stats`` start fresh so the
+        specialized compile's resolution split is measurable on its own.
+        """
+        sub = ShapeGraph()
+        sub._subst = dict(self._subst)
+        for name, iv in self.declared_ranges.items():
+            sub._bounds.declare(name, iv)
+        for name, r in ranges.items():
+            iv = as_interval(r) if isinstance(r, (Interval, int)) else \
+                Interval(*r)
+            met = self._bounds.lookup(name).meet(iv)
+            if met.is_empty():
+                raise ValueError(
+                    f"specialized range {iv!r} for dim {name!r} does not "
+                    f"intersect its declared range "
+                    f"{self._bounds.lookup(name)!r}")
+            sub._bounds.declare(name, met)
+        return sub
 
     # -- introspection ---------------------------------------------------------
     @property
