@@ -1,0 +1,210 @@
+"""Executor benchmark: per-call wall time and per-op dispatch overhead,
+lowered ProgramVM vs the reference op-by-op interpreter.
+
+Two measurement tiers, both on the hit path (env resolved and cached —
+the steady state of training and of bucketed serving):
+
+* a **dispatch microbench** — a long chain of tiny elementwise ops, so
+  per-op executor overhead dominates the math and the
+  ``(call - floor) / n_ops`` subtraction is stable.  ``floor`` replays
+  the identical (primitive, inputs, params) sequence with no executor
+  around it;
+* the **benchmark archs** — real train steps, where per-call wall time
+  is the serving-relevant number (the big binds dominate, so the
+  derived per-op overhead is reported but inherently noisier).
+
+Asserted invariants (the lowering contract):
+
+  * microbench: the VM's per-op dispatch overhead is >= 2x below the
+    reference interpreter's (the hard, stable contract);
+  * every arch: the VM call is not clearly slower than the reference
+    call (25% sanity bound — arch calls are math-dominated and jittery
+    on shared runners).
+
+    PYTHONPATH=src python -m benchmarks.exec_bench [--smoke] [--json F]
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+from jax import tree_util
+
+from repro.core import optimize
+from repro.core.executor.interpreter import PlanInterpreter
+from repro.core.lowering.program import OP_BIND_ARG, OP_COMPUTE
+
+from benchmarks.memplan_bench import _step_and_specs, concretize_spec
+
+ARCHS = ["llama2_1b", "gemma_2b", "granite_8b", "musicgen_medium"]
+SMOKE_ARCHS = ["llama2_1b", "musicgen_medium"]   # both input modes
+
+DIM_RANGES = {"b": (1, 8), "s": (8, 128)}
+ENV = {"b": 1, "s": 16}
+N_CALLS = 12
+
+
+def _record_bind_sequence(program, flat_args, env) -> List:
+    """One recorded pass over the fast stream: the exact (prim, inputs,
+    params) triples a call binds, with executor structure stripped."""
+    resolved = program.resolve(env)
+    storage = [None] * program.n_regs
+    seq = []
+    for inst in program.fast_instructions:
+        op = inst.op
+        if op == OP_COMPUTE:
+            ins = [storage[r] for r in inst.in_regs]
+            p = resolved.params[inst.cidx]
+            if inst.dim_as_value:
+                outs = [jnp.asarray(p["dim"], jnp.int32)]
+            elif inst.multi:
+                outs = list(inst.prim.bind(*ins, **p))
+            else:
+                outs = [inst.prim.bind(*ins, **p)]
+            seq.append((inst.prim, ins, p, inst.multi, inst.dim_as_value))
+            for oi, r in inst.store:
+                storage[r] = outs[oi] if inst.multi else outs[0]
+        elif op == OP_BIND_ARG:
+            storage[inst.reg] = (flat_args[inst.index]
+                                 if inst.index >= 0 else inst.const)
+    return seq
+
+
+def _best_wall_us(fn, n: int = N_CALLS) -> float:
+    """Best-of-n wall time: the least-noise estimate of the true cost."""
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _measure(vm, ref, program, flat, env, n_calls=N_CALLS) -> Dict:
+    """Warm both executors, record the bind floor, time everything."""
+    vm.run(flat)                                 # warm: resolve + caches
+    ref.run(flat)
+    seq = _record_bind_sequence(program, flat, env)
+
+    def bind_floor():
+        for prim, ins, p, multi, dimv in seq:
+            if dimv:
+                jnp.asarray(p["dim"], jnp.int32)
+            else:
+                prim.bind(*ins, **p)
+
+    floor_us = _best_wall_us(bind_floor, n_calls)
+    vm_us = _best_wall_us(lambda: vm.run(flat), n_calls)
+    ref_us = _best_wall_us(lambda: ref.run(flat), n_calls)
+    n_ops = len(seq)
+    vm_over = max(0.0, (vm_us - floor_us)) * 1e3 / n_ops
+    ref_over = max(0.0, (ref_us - floor_us)) * 1e3 / n_ops
+    return dict(
+        n_ops=n_ops,
+        floor_call_us=round(floor_us, 1),
+        vm_call_us=round(vm_us, 1),
+        ref_call_us=round(ref_us, 1),
+        vm_overhead_ns_per_op=round(vm_over, 1),
+        ref_overhead_ns_per_op=round(ref_over, 1),
+        # None: the VM ran at (or under) the bind floor — its overhead is
+        # below measurement noise, so no finite ratio exists
+        overhead_ratio=round(ref_over / vm_over, 2) if vm_over > 0 else None,
+        call_speedup=round(ref_us / vm_us, 3),
+    )
+
+
+CHAIN_OPS = 256
+
+
+def _chain_micro() -> Dict:
+    """Per-op dispatch overhead isolated: a chain of tiny elementwise ops
+    where executor structure, not math, is the cost."""
+    import jax
+
+    from repro.core import symbolic_dims
+
+    n, = symbolic_dims("n")
+
+    def chain(x):
+        for _ in range(CHAIN_OPS // 2):
+            x = x * 1.0000001 + 0.5
+        return x
+
+    fn = optimize(chain, jax.ShapeDtypeStruct((n,), jnp.float32),
+                  dynamic_dims={"n": (8, 4096)})
+    ref = PlanInterpreter(fn.plan)
+    flat = [jnp.arange(64, dtype=jnp.float32)]
+    row = _measure(fn.interp, ref, fn.program, flat, {"n": 64}, n_calls=30)
+    row["arch"] = "dispatch_chain_micro"
+    row["n_instructions"] = fn.program.n_instructions
+    assert row["vm_overhead_ns_per_op"] * 2 <= row["ref_overhead_ns_per_op"], (
+        f"VM per-op dispatch overhead {row['vm_overhead_ns_per_op']:.0f}ns "
+        f"is not >=2x below the reference's "
+        f"{row['ref_overhead_ns_per_op']:.0f}ns")
+    return row
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    archs = SMOKE_ARCHS if smoke else ARCHS
+    rows = [_chain_micro()]
+    for arch in archs:
+        r = _step_and_specs(arch)
+        if r is None:
+            continue
+        step, args = r
+        fn = optimize(step, *args, dynamic_dims=DIM_RANGES)
+        ref = PlanInterpreter(fn.plan)           # same plan, both executors
+        flat_specs, _ = tree_util.tree_flatten((args, {}))
+        rng = np.random.RandomState(0)
+        flat = [concretize_spec(s, ENV, rng) for s in flat_specs]
+
+        row = _measure(fn.interp, ref, fn.program, flat, ENV)
+        row["arch"] = arch
+        row["n_instructions"] = fn.program.n_instructions
+        # loose wall-clock sanity bound only: the hard >=2x contract is
+        # asserted on the microbench above, where the measurement is
+        # stable; arch calls are dominated by the math, so a shared CI
+        # runner can jitter them by far more than the VM's win
+        assert row["vm_call_us"] <= row["ref_call_us"] * 1.25, (
+            f"{arch}: VM call {row['vm_call_us']:.0f}us clearly slower "
+            f"than reference {row['ref_call_us']:.0f}us")
+        rows.append(row)
+    return rows
+
+
+def format_rows(rows: List[Dict]) -> str:
+    out = []
+    for r in rows:
+        ratio = r["overhead_ratio"]
+        tail = "below floor" if ratio is None else f"{ratio:.1f}x"
+        out.append(
+            f"{r['arch']:18s} {r['n_ops']:4d} ops  "
+            f"call vm={r['vm_call_us']:8.1f}us ref={r['ref_call_us']:8.1f}us "
+            f"(floor {r['floor_call_us']:8.1f}us)  "
+            f"overhead/op vm={r['vm_overhead_ns_per_op']:6.0f}ns "
+            f"ref={r['ref_overhead_ns_per_op']:6.0f}ns ({tail})")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="two archs (CI)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write rows as JSON")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print(format_rows(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

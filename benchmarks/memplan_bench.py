@@ -48,6 +48,24 @@ PROBE_ENVS = [(1, 16), (8, 512), (64, 4096)]
 SMOKE_PROBE_ENVS = [(1, 16), (8, 512)]
 
 
+def concretize_spec(spec, env, rng):
+    """Concrete array for a (possibly symbolic) ShapeDtypeStruct.
+
+    Shared by ``exec_bench`` and ``tests/test_lowering.py``: int dtypes
+    get small token ids, float dtypes get small *positive* values (some
+    leaves are optimizer second moments that the step square-roots).
+    """
+    import numpy as np
+
+    from repro.core.symbolic import dim_to_expr
+
+    shape = tuple(d if isinstance(d, int) else dim_to_expr(d).evaluate(env)
+                  for d in spec.shape)
+    if np.issubdtype(spec.dtype, np.integer):
+        return jnp.asarray(rng.randint(1, 7, shape), spec.dtype)
+    return jnp.asarray(rng.rand(*shape) * 0.02, spec.dtype)
+
+
 def _step_and_specs(arch):
     """Train step + symbolic ``(b, s)`` example specs for one bench arch.
 

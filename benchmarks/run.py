@@ -1,10 +1,11 @@
 """Benchmark harness: one entry per paper table + framework benches.
 
 Prints ``name,us_per_call,derived`` CSV lines per the repo convention and
-writes ``BENCH_memplan.json`` (peak/arena/bound per arch) and
+writes ``BENCH_memplan.json`` (peak/arena/bound per arch),
 ``BENCH_dispatch.json`` (bucketed vs monolithic bounds, dispatch overhead)
-so the planner's and dispatcher's trajectories are machine-trackable
-across PRs.
+and ``BENCH_exec.json`` (VM vs reference executor: per-call wall + per-op
+dispatch overhead) so the planner's, dispatcher's and executor's
+trajectories are machine-trackable across PRs.
     PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 import argparse
@@ -28,9 +29,9 @@ def main() -> None:
     args = ap.parse_args()
     steps = 6 if args.fast else 12
 
-    from benchmarks import (dispatch_bench, memplan_bench, remat_sweep,
-                            roofline, scheduler_micro, symbolic_coverage,
-                            table1_dynamic_training)
+    from benchmarks import (dispatch_bench, exec_bench, memplan_bench,
+                            remat_sweep, roofline, scheduler_micro,
+                            symbolic_coverage, table1_dynamic_training)
 
     # paper Table 1: dynamic vs static vs BladeDISC++ training
     rows = _timed(
@@ -82,6 +83,19 @@ def main() -> None:
     with open("BENCH_dispatch.json", "w") as f:
         json.dump({"rows": rows}, f, indent=2)
     print(dispatch_bench.format_rows(rows), file=sys.stderr)
+
+    # lowered-VM executor vs reference interpreter: per-call wall time and
+    # per-op dispatch overhead on the hit path (>=2x contract asserted on
+    # the dispatch microbench inside)
+    rows = _timed(
+        "exec", lambda: exec_bench.run(smoke=args.fast),
+        lambda rs: ";".join(
+            f"{r['arch']}:{r['call_speedup']:.2f}x"
+            f"@{r['vm_overhead_ns_per_op']:.0f}ns/op"
+            for r in rs))
+    with open("BENCH_exec.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(exec_bench.format_rows(rows), file=sys.stderr)
 
     # roofline readout from the dry-run artifacts (if present)
     try:

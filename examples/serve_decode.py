@@ -63,8 +63,10 @@ for s in [24, 900, 48, 200, 60, 128, 980]:            # mixed-length arrivals
 
 for group in batcher.drain():
     bound = group.arena_bound_bytes
+    n_inst = group.n_instructions                  # lowered Program length
     print(f"dispatch {len(group)} reqs in bucket {group.label:24s} "
-          f"(arena <= {bound/2**20:5.1f} MiB)")
+          f"(arena <= {bound/2**20:5.1f} MiB, "
+          f"program={n_inst if n_inst is not None else '?'} instrs)")
     for x in group.payloads:
         fn(w, x)
 st = fn.last_report.stats

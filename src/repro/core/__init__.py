@@ -6,10 +6,12 @@ The paper's primary contribution lives here: symbolic shape analysis
 the runtime (``repro.core.executor``), wired together by :func:`optimize`.
 """
 from .api import (BucketPlan, BucketSpace, DynamicShapeFunction,
-                  OptimizeReport, SpecializationTable, build_bucket_space,
-                  optimize, symbolic_dim, symbolic_dims)
+                  OptimizeReport, Program, ProgramVM, SpecializationTable,
+                  build_bucket_space, lower_plan, optimize, symbolic_dim,
+                  symbolic_dims)
 
 __all__ = ["DynamicShapeFunction", "OptimizeReport", "optimize",
            "symbolic_dim", "symbolic_dims",
            "BucketSpace", "SpecializationTable", "BucketPlan",
-           "build_bucket_space"]
+           "build_bucket_space",
+           "Program", "ProgramVM", "lower_plan"]

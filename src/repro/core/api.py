@@ -6,9 +6,10 @@
 
 ``optimize`` performs the paper's full pipeline once at "compile" time:
 symbolic trace → symbolic shape graph → op scheduling (§2.2) → remat
-planning (§2.3 compile half) → memory planning.  Calls then execute
-through the runtime interpreter (§2.3 runtime half) under an optional
-memory limit.
+planning (§2.3 compile half) → memory planning → lowering to a flat
+``Program``.  Calls then execute through the register ``ProgramVM``
+(§2.3 runtime half; ``executor="reference"`` keeps the op-by-op
+interpreter) under an optional memory limit.
 
 With ``buckets=...`` the declared shape space is additionally partitioned
 into buckets and the schedule → remat → memplan pipeline re-runs lazily
@@ -29,7 +30,9 @@ from jax import export, tree_util
 from .dispatch import BucketKey, BucketPlan, BucketSpace, BucketsSpec, \
     SpecializationTable, build_bucket_space
 from .executor.interpreter import PlanInterpreter, RunReport
-from .ir.trace import solve_env, trace_to_graph
+from .executor.vm import ProgramVM
+from .ir.trace import check_declared_ranges, solve_env, trace_to_graph
+from .lowering import Program, lower_plan
 from .memplan import ArenaPlan, build_arena_plan
 from .remat.planner import ExecutionPlan, build_plan
 from .scheduling.memsim import simulate_peak, simulate_peak_bound
@@ -40,7 +43,41 @@ __all__ = [
     "optimize", "DynamicShapeFunction", "OptimizeReport",
     "symbolic_dim", "symbolic_dims",
     "BucketSpace", "SpecializationTable", "BucketPlan", "build_bucket_space",
+    "Program", "ProgramVM", "lower_plan",
 ]
+
+_EXECUTORS = ("vm", "reference")
+
+
+def _build_executor(plan: ExecutionPlan, report: "OptimizeReport",
+                    executor: str, *,
+                    memory_limit: Optional[int],
+                    donate_inputs: bool, count_inputs: bool,
+                    size_cache=None, params_cache=None):
+    """Lower + wrap ``plan`` for one executor kind.
+
+    ``executor="vm"`` lowers the plan to a flat :class:`Program` (the
+    guaranteed peak bound decides whether the evict path is emitted) and
+    runs it on :class:`ProgramVM`; ``"reference"`` keeps the op-by-op
+    :class:`PlanInterpreter` for differential testing.  Returns
+    ``(runner, program)`` — ``program`` is ``None`` for the reference
+    interpreter."""
+    if executor not in _EXECUTORS:
+        raise ValueError(
+            f"executor must be one of {_EXECUTORS}, got {executor!r}")
+    if executor == "reference":
+        interp = PlanInterpreter(plan, memory_limit=memory_limit,
+                                 donate_inputs=donate_inputs,
+                                 count_inputs=count_inputs,
+                                 size_cache=size_cache,
+                                 params_cache=params_cache)
+        return interp, None
+    program = lower_plan(plan, memory_limit=memory_limit,
+                         donate_inputs=donate_inputs,
+                         count_inputs=count_inputs,
+                         peak_bound_bytes=report.peak_bound_bytes)
+    return ProgramVM(program, size_cache=size_cache,
+                     params_cache=params_cache), program
 
 
 def symbolic_dim(name: str):
@@ -181,6 +218,7 @@ class DynamicShapeFunction:
                  memory_limit: Optional[int] = None,
                  donate_inputs: bool = False,
                  count_inputs: bool = True,
+                 executor: str = "vm",
                  table: Optional[SpecializationTable] = None,
                  table_factory: Optional[
                      Callable[[Optional[int]], SpecializationTable]] = None):
@@ -188,9 +226,12 @@ class DynamicShapeFunction:
         self._in_tree = in_tree
         self._out_tree = out_tree
         self.report = report
-        self.interp = PlanInterpreter(plan, memory_limit=memory_limit,
-                                      donate_inputs=donate_inputs,
-                                      count_inputs=count_inputs)
+        self.executor = executor
+        # `interp` is the runner for the monolithic plan: a ProgramVM over
+        # the lowered Program (default) or the reference PlanInterpreter
+        self.interp, self._program = _build_executor(
+            plan, report, executor, memory_limit=memory_limit,
+            donate_inputs=donate_inputs, count_inputs=count_inputs)
         self.last_report: Optional[RunReport] = None
         self._table = table
         self._table_factory = table_factory
@@ -222,13 +263,17 @@ class DynamicShapeFunction:
     def _check_declared(self, env: Dict[str, int]) -> None:
         """Declared-range contract check against the *whole-range* graph —
         before bucket dispatch, so an out-of-range dim cannot land in an
-        edge bucket and fail there with a misleading sub-range message."""
-        for name, iv in self.plan.shape_graph.declared_ranges.items():
-            v = env.get(name)
-            if v is not None and not iv.contains(v):
-                raise ValueError(
-                    f"dim {name!r}={v} outside its declared range {iv}; "
-                    f"re-optimize with wider dynamic_dims to run this shape")
+        edge bucket and fail there with a misleading sub-range message.
+        Same helper both executors use on the non-bucketed path."""
+        check_declared_ranges(self.plan.shape_graph, env)
+
+    @property
+    def program(self) -> Optional[Program]:
+        """The lowered executable artifact (``None`` with the reference
+        executor).  With ``buckets=...`` this is the whole-range plan's
+        Program; per-bucket Programs live on the specialization table's
+        ``BucketPlan.program``."""
+        return self._program
 
     # -- bucketed specialization ------------------------------------------------
     @property
@@ -274,7 +319,8 @@ class DynamicShapeFunction:
         ``specialization_table.arena_bound_bytes(key)``."""
         return self.report.arena_bound_bytes
 
-    # reconfigure without retracing
+    # reconfigure without retracing (the VM re-lowers — cheap next to the
+    # pipeline — because the limit decides whether the evict path is emitted)
     def with_memory_limit(self, limit: Optional[int]) -> "DynamicShapeFunction":
         table = self._table_factory(limit) if self._table_factory else None
         return DynamicShapeFunction(self.plan, self._in_tree, self._out_tree,
@@ -282,6 +328,7 @@ class DynamicShapeFunction:
                                     memory_limit=limit,
                                     donate_inputs=self.interp.donate_inputs,
                                     count_inputs=self.interp.count_inputs,
+                                    executor=self.executor,
                                     table=table,
                                     table_factory=self._table_factory)
 
@@ -301,6 +348,7 @@ def optimize(
     memory_plan: str = "arena",
     buckets: Optional[BucketsSpec] = None,
     max_cached_plans: int = 16,
+    executor: str = "vm",
     **example_kwargs,
 ) -> DynamicShapeFunction:
     """Trace ``fn`` symbolically and build the optimized dynamic-shape plan.
@@ -326,10 +374,17 @@ def optimize(
     ``dynamic_dims``.  Calls dispatch to their bucket's plan; buckets
     compile lazily on first use (or via :meth:`DynamicShapeFunction.warmup`)
     and at most ``max_cached_plans`` stay resident (LRU).
+    ``executor``: ``"vm"`` (default) lowers each compiled plan to a flat
+    :class:`Program` executed by the register VM — per-call work is one
+    cached ``resolve`` plus the instruction stream; ``"reference"`` keeps
+    the op-by-op :class:`PlanInterpreter` (differential testing).
     """
     if memory_plan not in ("arena", "none"):
         raise ValueError(
             f"memory_plan must be 'arena' or 'none', got {memory_plan!r}")
+    if executor not in _EXECUTORS:
+        raise ValueError(
+            f"executor must be one of {_EXECUTORS}, got {executor!r}")
     graph, _ = trace_to_graph(fn, *example_args, **example_kwargs)
     sg = shape_graph if shape_graph is not None else ShapeGraph()
     if dynamic_dims:
@@ -364,13 +419,13 @@ def optimize(
             def compile_bucket(key, ranges) -> BucketPlan:
                 sub_sg = sg.specialized(ranges)
                 b_plan, b_report = _compile_pipeline(graph, sub_sg, **knobs)
-                interp = PlanInterpreter(b_plan, memory_limit=limit,
-                                         donate_inputs=donate_inputs,
-                                         count_inputs=count_inputs,
-                                         size_cache=size_cache,
-                                         params_cache=params_cache)
+                runner, b_program = _build_executor(
+                    b_plan, b_report, executor, memory_limit=limit,
+                    donate_inputs=donate_inputs, count_inputs=count_inputs,
+                    size_cache=size_cache, params_cache=params_cache)
                 return BucketPlan(key=key, ranges=ranges, plan=b_plan,
-                                  report=b_report, interp=interp)
+                                  report=b_report, interp=runner,
+                                  program=b_program)
             return SpecializationTable(_space, compile_bucket,
                                        max_live=max_cached_plans)
 
@@ -382,5 +437,6 @@ def optimize(
         memory_limit=memory_limit,
         donate_inputs=donate_inputs,
         count_inputs=count_inputs,
+        executor=executor,
         table=table_factory(memory_limit) if table_factory else None,
         table_factory=table_factory)

@@ -2,12 +2,15 @@
 
 ``SpecializationTable`` maps bucket keys to compiled :class:`BucketPlan`s —
 each one a full schedule → remat → memplan pipeline run under the bucket's
-tighter bound env.  Compilation is **lazy**: a bucket specializes the first
-time traffic lands in it (or through an explicit synchronous
+tighter bound env, then **lowered** to a flat executable ``Program`` with
+a ready ``ProgramVM`` (the reference interpreter under
+``executor="reference"``).  Compilation is **lazy**: a bucket specializes
+the first time traffic lands in it (or through an explicit synchronous
 ``warmup(envs)``), and the table retains at most ``max_live`` plans with
 LRU eviction — an evicted bucket recompiles on its next use, it does not
 error.  The hit path is a dict probe after the O(log n) per-dim key
-lookup: it never re-runs scheduling, remat search, or memory planning.
+lookup: it never re-runs scheduling, remat search, memory planning, or
+lowering.
 
 The table also answers ``arena_bound_bytes(key)`` — the bucket plan's
 guaranteed worst-case arena size over the bucket's sub-ranges — which the
@@ -29,17 +32,31 @@ BucketKey = Tuple[int, ...]
 
 @dataclass
 class BucketPlan:
-    """One bucket's compiled artifact: plan + report + ready interpreter."""
+    """One bucket's compiled artifact: plan + report + ready executor.
+
+    With the default VM executor the table caches the *lowered* artifact,
+    not just the plan: ``program`` is the bucket's flat instruction
+    :class:`~repro.core.lowering.Program` (``None`` under
+    ``executor="reference"``) and ``interp`` is the runner bound to it —
+    a ``ProgramVM``, or the reference ``PlanInterpreter``.  A dispatch
+    hit therefore lands on an executable whose sizes/params/offsets
+    resolve once per env, never on a plan that re-derives them per op."""
 
     key: BucketKey
     ranges: Dict[str, Interval]       # the sub-ranges this plan assumes
     plan: Any                         # ExecutionPlan
     report: Any                       # OptimizeReport for this bucket
-    interp: Any                       # PlanInterpreter bound to ``plan``
+    interp: Any                       # ProgramVM / PlanInterpreter runner
+    program: Any = None               # lowered Program (VM executor only)
 
     @property
     def arena_bound_bytes(self) -> Optional[int]:
         return self.report.arena_bound_bytes
+
+    @property
+    def n_instructions(self) -> Optional[int]:
+        """Instruction count of the lowered Program (observability)."""
+        return None if self.program is None else self.program.n_instructions
 
 
 class SpecializationTable:

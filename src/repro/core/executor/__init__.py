@@ -1,4 +1,6 @@
 from .interpreter import PlanInterpreter, RunReport
 from .memory import MemoryLimitExceeded, MemoryManager, MemoryStats
+from .vm import ProgramVM
 
-__all__ = ["PlanInterpreter", "RunReport", "MemoryLimitExceeded", "MemoryManager", "MemoryStats"]
+__all__ = ["PlanInterpreter", "ProgramVM", "RunReport",
+           "MemoryLimitExceeded", "MemoryManager", "MemoryStats"]

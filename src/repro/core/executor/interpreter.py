@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..ir.graph import Graph, Node, Value
-from ..ir.trace import refine_params, solve_env
+from ..ir.trace import refine_params, solve_checked_env
 from ..memplan.arena import ArenaAllocator
 from ..remat.planner import ExecutionPlan
 from ..remat.runtime import RuntimeRematPolicy
@@ -85,19 +85,14 @@ class PlanInterpreter:
         t0 = time.perf_counter()
         g, plan = self.g, self.plan
         if env is None:
-            env = solve_env(g, flat_args)
-            # declared dim ranges are a contract: compile-time decisions
-            # (schedule, static regen methods, guaranteed peak) assume them.
-            # A caller passing a pre-solved env (the bucketed dispatch hot
-            # path) has already validated it and skips both steps.
-            for name, iv in plan.shape_graph.declared_ranges.items():
-                v = env.get(name)
-                if v is not None and not iv.contains(v):
-                    raise ValueError(
-                        f"dim {name!r}={v} outside its declared range {iv}; "
-                        f"re-optimize with wider dynamic_dims to run this shape")
+            # a caller passing a pre-solved env (the bucketed dispatch hot
+            # path) has already validated it and skips both steps
+            env = solve_checked_env(g, plan.shape_graph, flat_args)
         policy = RuntimeRematPolicy(plan, env)
-        env_key = tuple(sorted(env.items()))
+        # namespaced by graph uid: node/value ids restart at 0 per graph,
+        # so a cache injected across interpreters must never let one
+        # graph's refined params/sizes answer for another's same-id node
+        env_key = (g.uid,) + tuple(sorted(env.items()))
         nbytes = self._size_cache.setdefault(env_key, {})
         refined = self._params_cache.setdefault(env_key, {})
         if len(self._size_cache) > 64:  # bound the per-shape caches

@@ -1,0 +1,295 @@
+"""Slim register VM over a lowered :class:`~repro.core.lowering.Program`.
+
+The default executor.  Two regimes, chosen per dim binding by
+``Program.resolve``:
+
+* **fast stream** — when no ``MaybeEvict`` can fire at this env (no
+  memory limit, or the replayed peak fits under it), the hot loop is
+  exactly: gather input registers, bind the primitive, store outputs,
+  null dead registers.  All sizes/params were resolved once per env and
+  the call's complete ``MemoryStats`` was precomputed by the resolve
+  replay — per-op dispatch overhead collapses to list indexing.
+* **dynamic stream** — under real memory pressure the full instruction
+  stream runs: ``MaybeEvict`` triggers the runtime remat policy at the
+  op boundaries the lowering marked, ``Regen`` rematerializes evicted
+  registers through reload or the candidate's lowered sub-program, and
+  frees honor regeneration holds.  Outputs are bitwise-identical to the
+  reference ``PlanInterpreter``; eviction counters can differ only when
+  victim scores tie exactly after remat churn (the interpreter's
+  storage-dict iteration order mutates on reinsertion, the VM's
+  candidate order is static).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..ir.trace import solve_checked_env
+from ..lowering.program import (OP_BIND_ARG, OP_COMPUTE, OP_DONATE,
+                                OP_FREE_SLOT, OP_MAYBE_EVICT, OP_REGEN,
+                                Program, ResolvedProgram)
+from ..memplan.arena import ArenaAllocator
+from ..remat.runtime import RuntimeRematPolicy
+from .interpreter import RunReport
+from .memory import MemoryManager, MemoryStats
+
+
+class ProgramVM:
+    """Executes a lowered Program; drop-in for ``PlanInterpreter.run``."""
+
+    def __init__(self, program: Program, *,
+                 size_cache: Optional[Dict[Tuple, Dict[int, int]]] = None,
+                 params_cache: Optional[
+                     Dict[Tuple, Dict[int, Dict[str, Any]]]] = None):
+        self.program = program
+        self.plan = program.plan
+        # shared per-env caches (bucketed dispatch passes one pair to every
+        # bucket executor; keys are namespaced by graph uid inside resolve)
+        self._size_cache = size_cache
+        self._params_cache = params_cache
+
+    # knobs live on the lowered artifact (they shaped the emission)
+    @property
+    def memory_limit(self) -> Optional[int]:
+        return self.program.memory_limit
+
+    @property
+    def donate_inputs(self) -> bool:
+        return self.program.donate_inputs
+
+    @property
+    def count_inputs(self) -> bool:
+        return self.program.count_inputs
+
+    # ---------------------------------------------------------------- run --
+    def run(self, flat_args: Sequence[Any],
+            env: Optional[Dict[str, int]] = None) -> Tuple[List[Any], RunReport]:
+        t0 = time.perf_counter()
+        prog = self.program
+        if env is None:
+            # pre-solved envs (bucketed dispatch hot path) skip both steps
+            env = solve_checked_env(prog.graph, prog.plan.shape_graph,
+                                    flat_args)
+        resolved = prog.resolve(env, self._size_cache, self._params_cache)
+        if resolved.fast_ok:
+            outs, stats = self._run_fast(flat_args, resolved)
+        else:
+            outs, stats = self._run_dynamic(flat_args, resolved, env)
+        wall = time.perf_counter() - t0
+        return outs, RunReport(stats=stats, wall_s=wall, env=env)
+
+    # ------------------------------------------------------------ fast path
+    def _run_fast(self, flat_args: Sequence[Any],
+                  resolved: ResolvedProgram) -> Tuple[List[Any], MemoryStats]:
+        prog = self.program
+        storage: List[Any] = [None] * prog.n_regs
+        params = resolved.params
+        for inst in prog.fast_instructions:
+            op = inst.op
+            if op == OP_COMPUTE:
+                ins = [storage[r] for r in inst.in_regs]
+                if inst.dim_as_value:
+                    out = jnp.asarray(params[inst.cidx]["dim"], jnp.int32)
+                    for _oi, r in inst.store:
+                        storage[r] = out
+                elif inst.multi:
+                    outs = inst.prim.bind(*ins, **params[inst.cidx])
+                    for oi, r in inst.store:
+                        storage[r] = outs[oi]
+                else:
+                    out = inst.prim.bind(*ins, **params[inst.cidx])
+                    for _oi, r in inst.store:
+                        storage[r] = out
+            elif op == OP_BIND_ARG:
+                storage[inst.reg] = (flat_args[inst.index]
+                                     if inst.index >= 0 else inst.const)
+            elif op == OP_FREE_SLOT or op == OP_DONATE:
+                storage[inst.reg] = None
+        outputs = [storage[r] for r in prog.out_regs]
+        return outputs, prog.stats_for(resolved)
+
+    # --------------------------------------------------------- dynamic path
+    def _run_dynamic(self, flat_args: Sequence[Any],
+                     resolved: ResolvedProgram,
+                     env: Dict[str, int]) -> Tuple[List[Any], MemoryStats]:
+        prog = self.program
+        plan = prog.plan
+        vid_of = prog.vid_of
+        reg_of = prog.reg_of
+        nbytes = resolved.nbytes
+        params = resolved.params
+        ensure_bytes = resolved.ensure_bytes
+        death = prog.death_step
+
+        policy = RuntimeRematPolicy(plan, env)
+        arena = None
+        if resolved.arena is not None:
+            arena = ArenaAllocator(plan.arena_plan, resolved.arena)
+        mm = MemoryManager(prog.memory_limit, arena=arena)
+
+        storage: List[Any] = [None] * prog.n_regs
+        host_storage: Dict[int, Any] = {}     # reg -> host (numpy) array
+        evicted_recompute: set = set()        # regs dropped, regenerable
+        holds: Dict[int, int] = {}            # regen source pins
+        pending_free: Dict[int, bool] = {}    # dead-but-held: reg -> counted
+        state = {"step": 0, "pinned": frozenset()}
+
+        def is_materializable(reg: int) -> bool:
+            return storage[reg] is not None or reg in host_storage \
+                or reg in evicted_recompute
+
+        def free_reg(reg: int, counted: bool) -> None:
+            was_tracked = is_materializable(reg)
+            storage[reg] = None
+            host_storage.pop(reg, None)
+            evicted_recompute.discard(reg)
+            if not was_tracked:
+                return
+            if counted:
+                mm.free(vid_of[reg])
+            else:
+                # uncounted donated input: still release its arena slot
+                mm.arena_release(vid_of[reg])
+
+        # -- eviction callback (the folded RuntimeRematPolicy check) ---------
+        def evict(need: int) -> int:
+            live: Dict[int, int] = {}
+            for reg in prog.candidate_regs:
+                if storage[reg] is None:
+                    continue
+                if death[reg] >= state["step"] or holds.get(reg, 0) > 0:
+                    live[vid_of[reg]] = mm.device_bytes(vid_of[reg])
+            decisions = policy.choose_victims(need, live, state["pinned"],
+                                              state["step"])
+            freed = 0
+            for dec in decisions:
+                reg = reg_of[dec.vid]
+                arr = storage[reg]
+                if arr is None:
+                    continue
+                storage[reg] = None
+                method = dec.method
+                sub = prog.regen.get(reg)
+                if method == "recompute":
+                    # recompute is only safe if every source is materializable
+                    if sub is None or not all(is_materializable(s)
+                                              for s in sub.source_regs):
+                        method = "offload"
+                if method == "offload":
+                    host_storage[reg] = np.asarray(arr)
+                    mm.evict_to_host(dec.vid)
+                else:
+                    for s in sub.source_regs:
+                        holds[s] = holds.get(s, 0) + 1
+                    evicted_recompute.add(reg)
+                    mm.evict_drop(dec.vid)
+                del arr
+                freed += dec.bytes_freed
+            return freed
+
+        mm.evict_callback = evict
+
+        # -- materialize-on-demand (Regen instruction body) ------------------
+        def materialize(reg: int) -> Any:
+            arr = storage[reg]
+            if arr is not None:
+                return arr
+            vid = vid_of[reg]
+            if reg in host_storage:  # reload path (H2D)
+                mm.ensure(nbytes[reg])
+                arr = jnp.asarray(host_storage.pop(reg))
+                mm.reload(vid)
+                storage[reg] = arr
+                return arr
+            if reg in evicted_recompute:  # recompute sub-program
+                sub = prog.regen[reg]
+                evicted_recompute.discard(reg)
+                for s in sub.source_regs:  # recursion strictly moves up-graph
+                    materialize(s)
+                temps: List[Any] = [None] * sub.n_temps
+                for st in sub.steps:
+                    ins = [temps[idx] if is_temp else materialize(idx)
+                           for is_temp, idx in st.in_refs]
+                    p = params[st.params_cidx]
+                    if st.dim_as_value:
+                        outs = [jnp.asarray(p["dim"], jnp.int32)]
+                    elif st.multi:
+                        outs = st.prim.bind(*ins, **p)
+                    else:
+                        outs = [st.prim.bind(*ins, **p)]
+                    for oi, ti in st.writes:
+                        temps[ti] = outs[oi]
+                out_arr = temps[sub.target_temp]
+                mm.ensure(nbytes[reg])
+                mm.restore(vid, nbytes[reg])
+                mm.stats.recompute_flops += resolved.regen_flops[reg]
+                storage[reg] = out_arr
+                # release regen holds on sources
+                for s in sub.source_regs:
+                    holds[s] = holds.get(s, 0) - 1
+                    if holds[s] <= 0:
+                        holds.pop(s, None)
+                        counted = pending_free.pop(s, None)
+                        if counted is not None:
+                            free_reg(s, counted)
+                return out_arr
+            raise KeyError(f"value {vid} is not materializable")
+
+        # -- instruction loop -------------------------------------------------
+        outputs: List[Any] = []
+        for inst in prog.instructions:
+            op = inst.op
+            if op == OP_COMPUTE:
+                ins = [storage[r] if storage[r] is not None else materialize(r)
+                       for r in inst.in_regs]
+                p = params[inst.cidx]
+                if inst.dim_as_value:
+                    out = jnp.asarray(p["dim"], jnp.int32)
+                    for _oi, r in inst.store:
+                        storage[r] = out
+                        mm.alloc(vid_of[r], nbytes[r])
+                elif inst.multi:
+                    outs = inst.prim.bind(*ins, **p)
+                    for oi, r in inst.store:
+                        storage[r] = outs[oi]
+                        mm.alloc(vid_of[r], nbytes[r])
+                else:
+                    out = inst.prim.bind(*ins, **p)
+                    for _oi, r in inst.store:
+                        storage[r] = out
+                        mm.alloc(vid_of[r], nbytes[r])
+                del ins
+            elif op == OP_REGEN:
+                state["step"] = inst.step
+                state["pinned"] = inst.pinned
+                for r in inst.regs:
+                    materialize(r)
+            elif op == OP_MAYBE_EVICT:   # Remat::EvictOp check
+                state["step"] = inst.step
+                state["pinned"] = inst.pinned
+                mm.ensure(ensure_bytes[inst.cidx])
+            elif op == OP_BIND_ARG:
+                storage[inst.reg] = (flat_args[inst.index]
+                                     if inst.index >= 0 else inst.const)
+                if arena is not None:
+                    arena.place_external(inst.vid, nbytes[inst.reg])
+                if prog.count_inputs:
+                    mm.alloc(inst.vid, nbytes[inst.reg])
+            elif op == OP_FREE_SLOT:
+                if holds.get(inst.reg, 0) > 0:
+                    pending_free[inst.reg] = True
+                else:
+                    free_reg(inst.reg, True)
+            elif op == OP_DONATE:
+                if holds.get(inst.reg, 0) > 0:
+                    pending_free[inst.reg] = inst.counted
+                else:
+                    free_reg(inst.reg, inst.counted)
+            else:  # OP_RETURN
+                outputs = [materialize(r) for r in inst.regs]
+        if arena is not None:
+            arena.write_stats(mm.stats)
+        return outputs, mm.stats

@@ -1,7 +1,10 @@
 from .graph import Graph, Node, Value
-from .trace import graph_from_closed_jaxpr, refine_params, solve_env, trace_to_graph
+from .trace import (check_declared_ranges, graph_from_closed_jaxpr,
+                    refine_params, solve_checked_env, solve_env,
+                    trace_to_graph)
 
 __all__ = [
     "Graph", "Node", "Value",
-    "graph_from_closed_jaxpr", "refine_params", "solve_env", "trace_to_graph",
+    "check_declared_ranges", "graph_from_closed_jaxpr", "refine_params",
+    "solve_checked_env", "solve_env", "trace_to_graph",
 ]

@@ -85,6 +85,13 @@ class Node:
         return f"({self.id}:{self.prim_name} {self.invals} -> {self.outvals})"
 
 
+# process-wide graph identity counter: interpreter/VM per-env caches are
+# namespaced by it, so a size/params cache shared across executors can
+# never alias two different graphs' entries for the same node/value id
+# (ids restart at 0 per graph)
+_GRAPH_UIDS = itertools.count()
+
+
 @dataclass
 class Graph:
     nodes: List[Node] = field(default_factory=list)
@@ -95,6 +102,7 @@ class Graph:
     values: List[Value] = field(default_factory=list)
     in_tree: Any = None
     out_tree: Any = None
+    uid: int = field(default_factory=lambda: next(_GRAPH_UIDS))
 
     _vid: itertools.count = field(default_factory=lambda: itertools.count())
     _nid: itertools.count = field(default_factory=lambda: itertools.count())

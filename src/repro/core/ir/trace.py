@@ -205,3 +205,31 @@ def solve_env(graph: Graph, concrete_args: Sequence[Any]) -> Dict[str, int]:
         got = expr.evaluate(env)
         assert got == concrete, f"composite dim mismatch: {expr}={got} vs {concrete}"
     return env
+
+
+def check_declared_ranges(shape_graph, env: Dict[str, int]) -> None:
+    """Enforce the declared-range contract on a solved env.
+
+    Compile-time decisions (schedule, static regen methods, guaranteed
+    peak/arena bounds, bucket partitions) assume every dim stays inside
+    its declared range; a dim outside it must raise before execution.
+    Shared by both executors and the bucketed dispatch path — a single
+    message, a single check.
+    """
+    for name, iv in shape_graph.declared_ranges.items():
+        v = env.get(name)
+        if v is not None and not iv.contains(v):
+            raise ValueError(
+                f"dim {name!r}={v} outside its declared range {iv}; "
+                f"re-optimize with wider dynamic_dims to run this shape")
+
+
+def solve_checked_env(graph: Graph, shape_graph,
+                      concrete_args: Sequence[Any]) -> Dict[str, int]:
+    """``solve_env`` + declared-range validation in one step.
+
+    Callers that pass a pre-solved env to an executor (the bucketed
+    dispatch hot path) have already been through this and skip both."""
+    env = solve_env(graph, concrete_args)
+    check_declared_ranges(shape_graph, env)
+    return env

@@ -1,0 +1,20 @@
+"""Plan -> Program lowering (the compilation-runtime split, finished).
+
+Compiles each (schedule, remat plan, arena plan) triple into a flat
+:class:`Program` of typed instructions over dense registers — the
+executable artifact the slim :class:`~repro.core.executor.vm.ProgramVM`
+runs, in the spirit of Relax's VM executable and SoD²'s pre-derived
+dynamic decisions.  ``Program.resolve(env)`` realizes every attached
+symbolic expression (sizes, params, slot offsets, FLOPs) for one dim
+binding in a single pass.
+"""
+from .lower import lower_plan
+from .program import (BindArg, Compute, Donate, FreeSlot, MaybeEvict,
+                      Program, Regen, RegenProgram, RegenStep,
+                      ResolvedProgram, Return)
+
+__all__ = [
+    "lower_plan", "Program", "ResolvedProgram",
+    "BindArg", "Compute", "MaybeEvict", "Regen", "FreeSlot", "Donate",
+    "Return", "RegenProgram", "RegenStep",
+]

@@ -1,0 +1,154 @@
+"""ExecutionPlan -> Program compilation (the lowering pass).
+
+One linear walk over the scheduled order turns every per-call decision
+the ``PlanInterpreter`` re-derives op-by-op into static instruction
+structure:
+
+* **registers** — value ids renumbered densely in first-store order
+  (inputs, consts, then scheduled outputs), so the VM indexes lists;
+* **death points** — each value's last consumer position is known from
+  the schedule, so frees become ``FreeSlot``/``Donate`` instructions
+  instead of per-op refcount bookkeeping;
+* **evict/regen guards** — ``MaybeEvict``/``Regen`` instructions are
+  emitted only when eviction is actually possible: there is a memory
+  limit, and the guaranteed worst-case peak (interval bounds over the
+  declared dim ranges) does not already prove every in-range env fits
+  under it.  With no limit — or a proven-safe one — the stream contains
+  no runtime remat machinery at all;
+* **regen sub-programs** — candidates' recompute subgraphs are lowered
+  inline by ``repro.core.remat.export.export_regen_programs``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..ir.graph import Value
+from ..ir.trace import _contains_symbolic
+from ..remat.export import export_regen_programs
+from ..remat.planner import ExecutionPlan
+from .program import (BindArg, Compute, Donate, FreeSlot, MaybeEvict,
+                      Program, Regen, Return)
+
+
+def lower_plan(plan: ExecutionPlan, *,
+               memory_limit: Optional[int] = None,
+               donate_inputs: bool = False,
+               count_inputs: bool = True,
+               peak_bound_bytes: Optional[int] = None) -> Program:
+    """Compile ``plan`` into a flat :class:`Program`.
+
+    ``peak_bound_bytes`` is the guaranteed worst-case free-run peak over
+    the declared dim ranges (from ``simulate_peak_bound``); when it is
+    known and ``<= memory_limit``, eviction is provably impossible and
+    the evict path is not emitted.
+    """
+    g = plan.graph
+    output_ids = {v.id for v in g.outputs}
+
+    reg_of: Dict[int, int] = {}
+    vid_of: List[int] = []
+    nbytes_exprs = []
+
+    def new_reg(v: Value) -> int:
+        r = reg_of.get(v.id)
+        if r is None:
+            r = len(vid_of)
+            reg_of[v.id] = r
+            vid_of.append(v.id)
+            nbytes_exprs.append(v.nbytes_expr)
+        return r
+
+    # eviction is possible only under a limit the bounds cannot clear
+    has_evict_path = memory_limit is not None and (
+        peak_bound_bytes is None or peak_bound_bytes > memory_limit)
+
+    instructions: List[Any] = []
+    for i, v in enumerate(g.inputs):
+        instructions.append(BindArg(reg=new_reg(v), index=i, kind="input",
+                                    const=None, vid=v.id))
+    for v in g.consts:
+        instructions.append(BindArg(reg=new_reg(v), index=-1, kind="const",
+                                    const=v.const_val, vid=v.id))
+
+    # death point = last consumer position in the scheduled order
+    death_pos: Dict[int, int] = {
+        vid: uses[-1] for vid, uses in plan.use_positions.items() if uses}
+
+    computes: List[Compute] = []
+    static_params: List[Optional[Dict[str, Any]]] = []
+    params_cidx_of: Dict[int, int] = {}
+    for step, node in enumerate(plan.order):
+        cidx = len(computes)
+        if has_evict_path:
+            pinned = frozenset(
+                [iv.id for iv in node.invals] + [ov.id for ov in node.outvals])
+            cand_in = tuple(dict.fromkeys(
+                reg_of[iv.id] for iv in node.invals
+                if iv.id in plan.candidates))
+            if cand_in:
+                instructions.append(Regen(regs=cand_in, step=step,
+                                          pinned=pinned))
+            instructions.append(MaybeEvict(cidx=cidx, step=step,
+                                           pinned=pinned))
+        store = tuple((oi, new_reg(ov)) for oi, ov in enumerate(node.outvals)
+                      if ov.consumers or ov.id in output_ids)
+        comp = Compute(cidx=cidx, node=node, prim=node.prim,
+                       multi=bool(node.prim is not None
+                                  and node.prim.multiple_results),
+                       dim_as_value=node.prim_name == "dim_as_value",
+                       in_regs=tuple(reg_of[iv.id] for iv in node.invals),
+                       store=store, step=step)
+        instructions.append(comp)
+        computes.append(comp)
+        static_params.append(
+            None if _contains_symbolic(node.params) else node.params)
+        params_cidx_of[node.id] = cidx
+
+        # frees, in the interpreter's first-occurrence order
+        seen = set()
+        for iv in node.invals:
+            if iv.id in seen:
+                continue
+            seen.add(iv.id)
+            if death_pos.get(iv.id) != step or iv.id in output_ids:
+                continue
+            if iv.is_materialized_input():
+                if donate_inputs:
+                    instructions.append(Donate(reg=reg_of[iv.id], vid=iv.id,
+                                               counted=count_inputs))
+            else:
+                instructions.append(FreeSlot(reg=reg_of[iv.id], vid=iv.id))
+
+    out_regs = tuple(reg_of[v.id] for v in g.outputs)
+    instructions.append(Return(regs=out_regs))
+
+    regen = {}
+    candidate_regs: Tuple[int, ...] = ()
+    if has_evict_path:
+        regen = export_regen_programs(plan, reg_of, params_cidx_of)
+        # first-store order (the interpreter iterates its storage dict,
+        # whose order additionally mutates on reload/recompute reinsertion
+        # — so on *exact* victim-score ties after remat churn the two
+        # executors may evict different victims; outputs stay identical,
+        # only eviction counters can differ)
+        candidate_regs = tuple(sorted(
+            (reg_of[vid] for vid in plan.candidates if vid in reg_of)))
+
+    death_step = [-1] * len(vid_of)
+    for vid, pos in death_pos.items():
+        r = reg_of.get(vid)
+        if r is not None:
+            death_step[r] = pos
+
+    fast = [inst for inst in instructions
+            if inst.op not in (Regen.op, MaybeEvict.op)]
+
+    return Program(plan=plan, graph=g, n_regs=len(vid_of), reg_of=reg_of,
+                   vid_of=vid_of, nbytes_exprs=nbytes_exprs,
+                   instructions=instructions, fast_instructions=fast,
+                   computes=computes, static_params=static_params,
+                   regen=regen, out_regs=out_regs, death_step=death_step,
+                   candidate_regs=candidate_regs,
+                   has_evict_path=has_evict_path,
+                   memory_limit=memory_limit, donate_inputs=donate_inputs,
+                   count_inputs=count_inputs)

@@ -123,6 +123,11 @@ class ResolvedArena:
     arena_bytes: int
     packed_height: int
     slot_cap_total: int
+    # concrete per-value byte offset into the packed arena for this env
+    # (arena-served values only — external/donated placements are the
+    # caller's memory).  Consumed by the lowered Program's resolve():
+    # offsets and sizes land in the executable artifact in one pass.
+    offsets: Dict[int, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -196,12 +201,13 @@ def _resolve_arena(plan: ArenaPlan, env: Dict[str, int]) -> ResolvedArena:
         asg = plan.assignment.get(vid)
         if asg is not None and plan.slots[asg.sid].external:
             continue
-        vals.append((iv.start, iv.end, iv.nbytes_expr.evaluate(env)))
+        vals.append((iv.start, iv.end, iv.nbytes_expr.evaluate(env), vid))
     vals.sort(key=lambda x: (-x[2], x[0]))
 
     placed: List[Tuple[int, int, int, int]] = []   # (start, end, size, off)
+    offsets: Dict[int, int] = {}
     height = 0
-    for (st, en, sz) in vals:
+    for (st, en, sz, vid) in vals:
         spans = sorted((off, off + s) for (s2, e2, s, off) in placed
                        if not (e2 < st or en < s2))
         off = 0
@@ -210,11 +216,13 @@ def _resolve_arena(plan: ArenaPlan, env: Dict[str, int]) -> ResolvedArena:
                 break
             off = max(off, hi)
         placed.append((st, en, sz, off))
+        offsets[vid] = off
         height = max(height, off + sz)
 
     return ResolvedArena(caps=caps, external=external,
                          arena_bytes=min(height, slot_total),
-                         packed_height=height, slot_cap_total=slot_total)
+                         packed_height=height, slot_cap_total=slot_total,
+                         offsets=offsets)
 
 
 def _representative_env(graph: Graph, sg: ShapeGraph) -> Dict[str, int]:

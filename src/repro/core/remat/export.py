@@ -1,16 +1,19 @@
-"""Export the remat analysis to the compiled (XLA) path.
+"""Export the remat analysis to the executable paths.
 
-The interpreter is the paper-faithful runtime; at 1000-node scale the
-train step runs under jit.  This module carries the §2.3 analysis across:
-from the symbolic recompute-subgraph search over a *single block's* graph,
-derive which jax.checkpoint policy the scanned-layer stack should use —
-i.e. how much of the block is cheap to recompute (elementwise chains)
-versus worth saving (matmul outputs).
+Two consumers:
+
+* the lowered runtime — :func:`export_regen_programs` turns each
+  candidate's recompute subgraph into a register-addressed
+  ``RegenProgram`` the ``ProgramVM`` runs inline (the paper's
+  ``Remat::RegenerateOp``, compiled instead of interpreted);
+* the compiled (XLA) path — :func:`recommend_policy` derives which
+  jax.checkpoint policy a scanned-layer stack should use from the §2.3
+  search results (how much of the block is cheap to recompute).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import TYPE_CHECKING, Callable, Dict, Optional
 
 import jax
 
@@ -18,6 +21,57 @@ from ..ir.graph import Graph
 from ..remat.planner import ExecutionPlan
 from ..remat.search import node_flops
 from ..symbolic import ShapeGraph
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..lowering.program import RegenProgram
+
+
+def export_regen_programs(plan: ExecutionPlan, reg_of: Dict[int, int],
+                          params_cidx_of: Dict[int, int],
+                          ) -> Dict[int, "RegenProgram"]:
+    """Lower every candidate's recompute subgraph over VM registers.
+
+    ``reg_of`` maps value ids to the main program's dense registers,
+    ``params_cidx_of`` maps node ids to their Compute params entry (the
+    sub-program reuses the main program's per-env refined params — no
+    second refinement pass).  Returns ``{target register: RegenProgram}``
+    with sub-program-local temps for values produced inside the subgraph
+    and main registers (materialized recursively at runtime) for the
+    subgraph's sources.
+    """
+    from ..lowering.program import RegenProgram, RegenStep
+
+    out: Dict[int, "RegenProgram"] = {}
+    for vid, cand in plan.candidates.items():
+        rp = cand.recompute
+        if rp is None:
+            continue
+        temp_of: Dict[int, int] = {}
+        steps = []
+        for nid in rp.node_ids:
+            node = plan.node_by_id[nid]
+            in_refs = []
+            for iv in node.invals:
+                t = temp_of.get(iv.id)
+                in_refs.append((True, t) if t is not None
+                               else (False, reg_of[iv.id]))
+            writes = []
+            for oi, ov in enumerate(node.outvals):
+                ti = temp_of.setdefault(ov.id, len(temp_of))
+                writes.append((oi, ti))
+            steps.append(RegenStep(
+                node=node, prim=node.prim,
+                multi=bool(node.prim is not None
+                           and node.prim.multiple_results),
+                dim_as_value=node.prim_name == "dim_as_value",
+                params_cidx=params_cidx_of[nid],
+                in_refs=tuple(in_refs), writes=tuple(writes)))
+        out[reg_of[vid]] = RegenProgram(
+            target_reg=reg_of[vid], target_vid=vid,
+            source_regs=tuple(reg_of[s] for s in rp.source_ids),
+            n_temps=len(temp_of), steps=tuple(steps),
+            target_temp=temp_of[vid], flops_expr=rp.flops)
+    return out
 
 
 @dataclass

@@ -4,7 +4,8 @@
 for transformers, latent caches for MLA, recurrent states for SSM/xLSTM).
 ``BucketBatcher`` is the shape-bucketed serving front end: it groups
 queued requests by specialization bucket before dispatch, so one
-specialized plan serves each group and admission control can reason in
+specialized plan — lowered to a flat executable ``Program`` run by the
+slim VM — serves each group, and admission control can reason in
 per-bucket guaranteed arena bounds.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
@@ -40,6 +41,11 @@ class BucketGroup:
     # guaranteed worst-case arena size of the bucket's plan (None when the
     # bucket has an unbounded dim or memory_plan="none")
     arena_bound_bytes: Optional[int] = None
+    # instruction count of the bucket's lowered Program when its plan is
+    # resident (None: not yet compiled, or executor="reference") — an
+    # observability hook: the group will run a flat executable, and this
+    # is how long it is
+    n_instructions: Optional[int] = None
 
     def __len__(self) -> int:
         return len(self.envs)
@@ -112,10 +118,15 @@ class BucketBatcher:
                     and bound > self.memory_budget:
                 held[key] = reqs
                 continue
+            # resident plans carry their lowered Program; peek only — a
+            # group must never force a compile just to report its length
+            resident = self.table.peek(key)
             admitted.append(BucketGroup(
                 key=key, label=self.table.space.describe(key),
                 envs=[e for e, _ in reqs], payloads=[p for _, p in reqs],
-                arena_bound_bytes=bound))
+                arena_bound_bytes=bound,
+                n_instructions=None if resident is None
+                else resident.n_instructions))
         self._queue = held
         return admitted
 
