@@ -149,6 +149,8 @@ def _chain_micro() -> Dict:
 def run(smoke: bool = False) -> List[Dict]:
     archs = SMOKE_ARCHS if smoke else ARCHS
     rows = [_chain_micro()]
+    for r in rows:
+        r["smoke"] = smoke   # bench_regress doubles tolerance for smoke rows
     for arch in archs:
         r = _step_and_specs(arch)
         if r is None:
@@ -170,6 +172,7 @@ def run(smoke: bool = False) -> List[Dict]:
         assert row["vm_call_us"] <= row["ref_call_us"] * 1.25, (
             f"{arch}: VM call {row['vm_call_us']:.0f}us clearly slower "
             f"than reference {row['ref_call_us']:.0f}us")
+        row["smoke"] = smoke
         rows.append(row)
     return rows
 

@@ -110,18 +110,62 @@ class OptimizeReport:
     n_checked_reuses: int = 0
     # snapshot of ShapeGraph.cmp_stats after this compile: how many symbolic
     # comparisons resolved by constant difference / interval separation /
-    # not at all (per-bucket reports show the specialization gain)
+    # not at all (per-bucket reports show the specialization gain), plus the
+    # memo-table cache_hit/cache_miss/inherited counters
     cmp_stats: Dict[str, int] = field(default_factory=dict)
     # the bucket partition (whole-range report only; None without buckets=)
     buckets: Optional[BucketSpace] = None
+    # incremental bucket compile: True when this report's schedule + remat
+    # plan were inherited from the whole-range compile because no verdict
+    # they depended on flipped under the bucket's narrowed ranges
+    reused_parent_schedule: bool = False
+    # weaker reuse: the bucket's scheduler re-ran (some remat verdict
+    # flipped) but reproduced the parent's raw order, so the parent's
+    # guard/exchange post-pass result was adopted without re-simulation
+    reused_parent_postpass: bool = False
 
     @property
     def cmp_symbolic_fraction(self) -> float:
         """Fraction of comparisons resolved (constant or interval layer)."""
-        total = sum(self.cmp_stats.values())
+        total = sum(self.cmp_stats.get(k, 0)
+                    for k in ("const", "interval", "unknown"))
         if not total:
             return 1.0
         return 1.0 - self.cmp_stats.get("unknown", 0) / total
+
+
+@dataclass
+class PipelineArtifacts:
+    """What one ``_compile_pipeline`` run hands to incremental re-runs.
+
+    ``cmp_keys`` is the set of ``ShapeGraph.compare`` keys the scheduling
+    and remat phases consulted (recorded via
+    :meth:`ShapeGraph.record_cmp_keys`); ``sg`` is the graph whose memo
+    holds those verdicts.  A bucket compile under ``sg.specialized(...)``
+    reuses ``sched``/``candidates`` wholesale when
+    :meth:`ShapeGraph.verdicts_match` proves none of those verdicts flip
+    under the narrowed ranges — only the bounds-dependent phases (memory
+    planning, peak bounds, lowering) re-run.
+    """
+
+    sched: ScheduleResult
+    used_sched: bool
+    candidates: Dict[int, Any]            # value id -> CandidateInfo
+    cmp_keys: frozenset
+    sg: ShapeGraph
+    # the scheduler's raw order (node ids, before the best-of guard and
+    # exchange refinement): a bucket whose re-run scheduler reproduces it
+    # adopts the parent's guarded + exchanged final order without re-paying
+    # the probe simulations
+    raw_order_ids: Tuple[int, ...] = ()
+    # shared range-independent expression caches: scheduler impact
+    # polynomials and remat-search (impact, sources)/flops — re-running a
+    # phase under a narrowed graph re-decides verdicts, not expressions
+    sched_expr_cache: Dict = field(default_factory=dict)
+    remat_expr_cache: Dict = field(default_factory=dict)
+    # per-candidate compare keys of the remat search, for candidate-granular
+    # reuse when only some verdicts flip under a bucket
+    cand_cmp_keys: Dict[int, frozenset] = field(default_factory=dict)
 
 
 def _compile_pipeline(
@@ -133,14 +177,24 @@ def _compile_pipeline(
     count_inputs: bool = True,
     max_subgraph: int = 24,
     guard_env: Optional[Dict[str, int]] = None,
-) -> Tuple[ExecutionPlan, OptimizeReport]:
+    parent: Optional[PipelineArtifacts] = None,
+    collect: bool = False,
+) -> Tuple[ExecutionPlan, OptimizeReport, Optional[PipelineArtifacts]]:
     """schedule → remat → memplan over an already-traced graph.
 
     The compile-time half of :func:`optimize`, factored out so bucketed
     specialization can re-run it per bucket: the same graph compiles under
     a narrowed ``ShapeGraph`` (see :meth:`ShapeGraph.specialized`) and the
     tighter bounds resolve more decisions statically.
+
+    ``collect=True`` records the compare keys the schedule + remat phases
+    depend on and returns them as :class:`PipelineArtifacts` (third tuple
+    element, else ``None``).  ``parent=`` makes this run *incremental*:
+    when no recorded verdict flips under ``sg``'s narrowed ranges, the
+    parent's schedule and remat candidates are reused (intervals refreshed
+    under the tighter bounds) and only memory planning + peak bounds run.
     """
+    from .remat.search import respecialize_candidates
 
     def _clamp(name: str, v: int) -> int:
         iv = sg.declared_ranges.get(name)
@@ -152,42 +206,89 @@ def _compile_pipeline(
             v = min(v, iv.hi)
         return v
 
-    if enable_scheduling:
-        sched = schedule_graph(graph, sg)
-        env = dict(guard_env) if guard_env else {
-            name: 64 for name in graph.free_symbols()}
-        for name in graph.free_symbols():
-            env.setdefault(name, 64)
-        env = {k: _clamp(k, v) for k, v in env.items()}
-        probe_envs = [env,
-                      {k: _clamp(k, max(1, v // 4)) for k, v in env.items()},
-                      {k: _clamp(k, v * 4) for k, v in env.items()}]
-        base = simulate_peak(graph, graph.nodes, env, count_inputs=count_inputs)
-        tuned = simulate_peak(graph, sched.order, env, count_inputs=count_inputs)
-        used_sched = tuned.peak_bytes <= base.peak_bytes
-        kept_peak = min(tuned.peak_bytes, base.peak_bytes)
-        if not used_sched:  # keep the better order (never regress)
-            sched = ScheduleResult(list(graph.nodes), sched.symbolic_decisions,
+    sched = None
+    candidates: Optional[Dict[int, Any]] = None
+    used_sched = False
+    reused = False
+    reused_postpass = False
+    raw_order_ids: Tuple[int, ...] = ()
+    recorded: set = set()
+    cand_keys: Dict[int, frozenset] = {}
+    sched_cache = parent.sched_expr_cache if parent is not None else {}
+    remat_cache = parent.remat_expr_cache if parent is not None else {}
+    if parent is not None and enable_scheduling and \
+            sg.verdicts_match(parent.sg, parent.cmp_keys):
+        # incremental fast path: every schedule/remat decision would come
+        # out identical — reuse them; bounds-dependent phases still re-run
+        sched = parent.sched
+        used_sched = parent.used_sched
+        candidates = respecialize_candidates(parent.candidates, sg) \
+            if enable_remat else {}
+        reused = True
+    elif enable_scheduling:
+        with sg.record_cmp_keys() as keys:
+            sched = schedule_graph(graph, sg, impact_expr_cache=sched_cache)
+        recorded |= keys
+        raw_order_ids = tuple(n.id for n in sched.order)
+        if parent is not None and parent.raw_order_ids == raw_order_ids:
+            # the narrowed ranges changed some remat verdict but not the
+            # schedule itself: adopt the parent's guarded + exchanged final
+            # order (already proven no worse at the parent's probe envs)
+            sched = ScheduleResult(list(parent.sched.order),
+                                   sched.symbolic_decisions,
                                    sched.tiebreak_decisions)
-        # pairwise-exchange refinement (beyond-paper; guarded at probe envs);
-        # the kept order's peak is already known — only the refined order
-        # needs a fresh simulation
-        from .scheduling.exchange import exchange_pass
-        refined = exchange_pass(graph, sched.order, probe_envs)
-        if simulate_peak(graph, refined, env,
-                         count_inputs=count_inputs).peak_bytes <= kept_peak:
-            sched = ScheduleResult(refined, sched.symbolic_decisions,
-                                   sched.tiebreak_decisions)
+            used_sched = parent.used_sched
+            reused_postpass = True
+        else:
+            env = dict(guard_env) if guard_env else {
+                name: 64 for name in graph.free_symbols()}
+            for name in graph.free_symbols():
+                env.setdefault(name, 64)
+            env = {k: _clamp(k, v) for k, v in env.items()}
+            probe_envs = [env,
+                          {k: _clamp(k, max(1, v // 4)) for k, v in env.items()},
+                          {k: _clamp(k, v * 4) for k, v in env.items()}]
+            base = simulate_peak(graph, graph.nodes, env,
+                                 count_inputs=count_inputs)
+            tuned = simulate_peak(graph, sched.order, env,
+                                  count_inputs=count_inputs)
+            used_sched = tuned.peak_bytes <= base.peak_bytes
+            kept_peak = min(tuned.peak_bytes, base.peak_bytes)
+            if not used_sched:  # keep the better order (never regress)
+                sched = ScheduleResult(list(graph.nodes),
+                                       sched.symbolic_decisions,
+                                       sched.tiebreak_decisions)
+            # pairwise-exchange refinement (beyond-paper; guarded at probe
+            # envs); the kept order's peak is already known — only the
+            # refined order needs a fresh simulation
+            from .scheduling.exchange import exchange_pass
+            refined = exchange_pass(graph, sched.order, probe_envs)
+            if simulate_peak(graph, refined, env,
+                             count_inputs=count_inputs).peak_bytes <= kept_peak:
+                sched = ScheduleResult(refined, sched.symbolic_decisions,
+                                       sched.tiebreak_decisions)
     else:
         sched = ScheduleResult(list(graph.nodes), 0, 0)
-        used_sched = False
 
     arena_plan = None
     if memory_plan == "arena":
         arena_plan = build_arena_plan(graph, sched.order, sg,
                                       donate_inputs=donate_inputs)
-    plan = build_plan(graph, sched, sg, enable_remat=enable_remat,
-                      max_subgraph=max_subgraph, arena_plan=arena_plan)
+    if candidates is not None:
+        plan = ExecutionPlan(graph=graph, order=list(sched.order),
+                             shape_graph=sg, candidates=candidates,
+                             arena_plan=arena_plan)
+    else:
+        with sg.record_cmp_keys() as keys:
+            plan = build_plan(graph, sched, sg, enable_remat=enable_remat,
+                              max_subgraph=max_subgraph,
+                              arena_plan=arena_plan,
+                              remat_expr_cache=remat_cache,
+                              cand_keys_out=cand_keys if collect else None,
+                              parent_remat=None if parent is None else
+                              (parent.sg, parent.candidates,
+                               parent.cand_cmp_keys))
+        recorded |= keys
     peak_lo = peak_hi = None
     if sg.declared_ranges:  # without ranges the bound is vacuous (hi = None)
         peak_lo, peak_hi = simulate_peak_bound(graph, sched.order, sg,
@@ -200,14 +301,25 @@ def _compile_pipeline(
                             n_static_regen=plan.n_static_regen,
                             peak_bound_bytes=peak_hi,
                             peak_bound_lo=peak_lo,
-                            cmp_stats=dict(sg.cmp_stats))
+                            cmp_stats=dict(sg.cmp_stats),
+                            reused_parent_schedule=reused,
+                            reused_parent_postpass=reused_postpass)
     if arena_plan is not None:
         # None whenever some live dim has no declared upper bound
         report.arena_bound_bytes = arena_plan.arena_bound_bytes
         report.n_arena_slots = arena_plan.n_slots
         report.n_provable_reuses = arena_plan.n_provable_reuses
         report.n_checked_reuses = arena_plan.n_checked_reuses
-    return plan, report
+    artifacts = None
+    if collect:
+        artifacts = PipelineArtifacts(sched=sched, used_sched=used_sched,
+                                      candidates=dict(plan.candidates),
+                                      cmp_keys=frozenset(recorded), sg=sg,
+                                      raw_order_ids=raw_order_ids,
+                                      sched_expr_cache=sched_cache,
+                                      remat_expr_cache=remat_cache,
+                                      cand_cmp_keys=cand_keys)
+    return plan, report, artifacts
 
 
 class DynamicShapeFunction:
@@ -228,10 +340,16 @@ class DynamicShapeFunction:
         self.report = report
         self.executor = executor
         # `interp` is the runner for the monolithic plan: a ProgramVM over
-        # the lowered Program (default) or the reference PlanInterpreter
-        self.interp, self._program = _build_executor(
-            plan, report, executor, memory_limit=memory_limit,
-            donate_inputs=donate_inputs, count_inputs=count_inputs)
+        # the lowered Program (default) or the reference PlanInterpreter.
+        # A background table already lowered the identical whole-range plan
+        # for its fallback — adopt it instead of lowering twice
+        if table is not None and table.fallback is not None:
+            self.interp = table.fallback.interp
+            self._program = table.fallback.program
+        else:
+            self.interp, self._program = _build_executor(
+                plan, report, executor, memory_limit=memory_limit,
+                donate_inputs=donate_inputs, count_inputs=count_inputs)
         self.last_report: Optional[RunReport] = None
         self._table = table
         self._table_factory = table_factory
@@ -251,9 +369,23 @@ class DynamicShapeFunction:
             self._check_declared(env)
             bp, _hit = self._table.lookup(env)
             dispatch_ns = time.perf_counter_ns() - t0
-            # env is solved + validated once, here; the interpreter trusts it
-            outs, report = bp.interp.run(flat, env=env)
-            self.last_bucket = bp.key
+            # env is solved + validated once, here; the interpreter trusts
+            # it.  The began/ended bracket tells the background worker a
+            # request is mid-flight so compiles defer instead of contending
+            # (skipped without a worker: it is two lock round-trips per call)
+            if self._table.background:
+                self._table.request_began()
+                try:
+                    outs, report = bp.interp.run(flat, env=env)
+                finally:
+                    self._table.request_ended()
+            else:
+                outs, report = bp.interp.run(flat, env=env)
+            # bp.key is None when a background miss served the whole-range
+            # fallback; re-derive the bucket from this request's own env
+            # (shared table state could have moved under concurrent traffic)
+            self.last_bucket = bp.key if bp.key is not None \
+                else self._table.key_of(env)
             report.stats.dispatch_ns = dispatch_ns
             report.stats.bucket_hits = self._table.hits
             report.stats.specialize_count = self._table.specialize_count
@@ -296,6 +428,19 @@ class DynamicShapeFunction:
         if isinstance(envs, Mapping):
             envs = [envs]
         return self._table.warmup(envs)
+
+    def drain_specializations(self, timeout: Optional[float] = None) -> List[BucketKey]:
+        """Block until every in-flight background specialization lands.
+
+        The deterministic join for ``background_specialize=True``: after it
+        returns, every bucket that traffic has touched is compiled and the
+        table's ``specialize_count`` matches what synchronous specialization
+        would have produced.  Returns the bucket keys that completed while
+        draining; a no-op (empty list) without bucketed dispatch or with
+        nothing in flight."""
+        if self._table is None:
+            return []
+        return self._table.drain_background(timeout=timeout)
 
     @property
     def guaranteed_peak_bytes(self) -> Optional[int]:
@@ -348,6 +493,7 @@ def optimize(
     memory_plan: str = "arena",
     buckets: Optional[BucketsSpec] = None,
     max_cached_plans: int = 16,
+    background_specialize: bool = False,
     executor: str = "vm",
     **example_kwargs,
 ) -> DynamicShapeFunction:
@@ -374,6 +520,13 @@ def optimize(
     ``dynamic_dims``.  Calls dispatch to their bucket's plan; buckets
     compile lazily on first use (or via :meth:`DynamicShapeFunction.warmup`)
     and at most ``max_cached_plans`` stay resident (LRU).
+    ``background_specialize``: with ``buckets=``, a bucket miss no longer
+    compiles on the request thread — the request is served immediately by
+    the whole-range fallback plan (always valid for any in-range env)
+    while a background worker runs the bucket's pipeline and atomically
+    swaps the compiled plan into the table; join deterministically via
+    :meth:`DynamicShapeFunction.warmup` or
+    :meth:`DynamicShapeFunction.drain_specializations`.
     ``executor``: ``"vm"`` (default) lowers each compiled plan to a flat
     :class:`Program` executed by the register VM — per-call work is one
     cached ``resolve`` plus the instruction stream; ``"reference"`` keeps
@@ -382,6 +535,10 @@ def optimize(
     if memory_plan not in ("arena", "none"):
         raise ValueError(
             f"memory_plan must be 'arena' or 'none', got {memory_plan!r}")
+    if background_specialize and buckets is None:
+        raise ValueError(
+            "background_specialize=True requires bucketed dispatch — pass "
+            "optimize(..., buckets=...)")
     if executor not in _EXECUTORS:
         raise ValueError(
             f"executor must be one of {_EXECUTORS}, got {executor!r}")
@@ -403,7 +560,10 @@ def optimize(
                  count_inputs=count_inputs,
                  max_subgraph=max_subgraph,
                  guard_env=guard_env)
-    plan, report = _compile_pipeline(graph, sg, **knobs)
+    # collect the schedule/remat artifacts + their compare-key dependencies
+    # so per-bucket specialization can re-run incrementally
+    plan, report, artifacts = _compile_pipeline(graph, sg, collect=True,
+                                                **knobs)
 
     table_factory = None
     if buckets is not None:
@@ -418,7 +578,8 @@ def optimize(
                           _space=space) -> SpecializationTable:
             def compile_bucket(key, ranges) -> BucketPlan:
                 sub_sg = sg.specialized(ranges)
-                b_plan, b_report = _compile_pipeline(graph, sub_sg, **knobs)
+                b_plan, b_report, _ = _compile_pipeline(
+                    graph, sub_sg, parent=artifacts, **knobs)
                 runner, b_program = _build_executor(
                     b_plan, b_report, executor, memory_limit=limit,
                     donate_inputs=donate_inputs, count_inputs=count_inputs,
@@ -426,8 +587,19 @@ def optimize(
                 return BucketPlan(key=key, ranges=ranges, plan=b_plan,
                                   report=b_report, interp=runner,
                                   program=b_program)
+            fallback = None
+            if background_specialize:
+                f_runner, f_program = _build_executor(
+                    plan, report, executor, memory_limit=limit,
+                    donate_inputs=donate_inputs, count_inputs=count_inputs,
+                    size_cache=size_cache, params_cache=params_cache)
+                fallback = BucketPlan(key=None, ranges=dict(sg.declared_ranges),
+                                      plan=plan, report=report,
+                                      interp=f_runner, program=f_program)
             return SpecializationTable(_space, compile_bucket,
-                                       max_live=max_cached_plans)
+                                       max_live=max_cached_plans,
+                                       background=background_specialize,
+                                       fallback=fallback)
 
     flat, in_tree = tree_util.tree_flatten((example_args, example_kwargs))
     out_shapes = jax.eval_shape(fn, *example_args, **example_kwargs)

@@ -12,15 +12,33 @@ error.  The hit path is a dict probe after the O(log n) per-dim key
 lookup: it never re-runs scheduling, remat search, memory planning, or
 lowering.
 
+With ``background=True`` (``optimize(..., background_specialize=True)``)
+a miss does not compile on the calling thread either: the request is
+answered immediately with the **whole-range fallback plan** — valid for
+every in-range env, it is the plan a bucket-less deployment would run —
+while a single background worker compiles the bucket and atomically swaps
+the finished :class:`BucketPlan` into the table.  Subsequent traffic in
+that bucket hits the specialized plan.  ``warmup`` stays a synchronous,
+deterministic join (it waits for in-flight compiles rather than starting
+duplicates), and ``drain_background`` blocks until every in-flight
+specialization lands — after it returns, ``specialize_count`` matches
+what synchronous compilation would have produced.
+
 The table also answers ``arena_bound_bytes(key)`` — the bucket plan's
 guaranteed worst-case arena size over the bucket's sub-ranges — which the
 serving path uses for admission control by bucket (see
-``repro.launch.serve.BucketBatcher``).
+``repro.launch.serve.BucketBatcher``).  In background mode an unknown
+bound does not stall the caller: the whole-range bound (a sound guarantee
+for *every* bucket) is returned while the exact bucket bound compiles in
+the background.
 """
 from __future__ import annotations
 
+import threading
+import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from concurrent.futures import Future, ThreadPoolExecutor, wait as futures_wait
+from dataclasses import dataclass
 from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Tuple)
 
@@ -28,6 +46,15 @@ from ..symbolic.intervals import Interval
 from .buckets import BucketSpace
 
 BucketKey = Tuple[int, ...]
+
+# Background-compile deferral: the pipeline is Python-heavy, so under the
+# GIL a compile running concurrently with request execution inflates serve
+# latency.  The worker waits for the dispatch path to go quiet (no request
+# executing) before it starts, polling every _BACKGROUND_POLL_S, but never
+# defers longer than _BACKGROUND_MAX_DEFER_S — a saturated server still
+# gets its specializations.
+_BACKGROUND_POLL_S = 0.005
+_BACKGROUND_MAX_DEFER_S = 2.0
 
 
 @dataclass
@@ -40,9 +67,12 @@ class BucketPlan:
     ``executor="reference"``) and ``interp`` is the runner bound to it —
     a ``ProgramVM``, or the reference ``PlanInterpreter``.  A dispatch
     hit therefore lands on an executable whose sizes/params/offsets
-    resolve once per env, never on a plan that re-derives them per op."""
+    resolve once per env, never on a plan that re-derives them per op.
 
-    key: BucketKey
+    ``key is None`` marks the whole-range *fallback* plan a background
+    table serves on a miss while the bucket compiles."""
+
+    key: Optional[BucketKey]
     ranges: Dict[str, Interval]       # the sub-ranges this plan assumes
     plan: Any                         # ExecutionPlan
     report: Any                       # OptimizeReport for this bucket
@@ -67,14 +97,24 @@ class SpecializationTable:
     the dispatch counters (``hits``/``misses``/``specialize_count``/
     ``evictions``).  ``specialize_count`` counts *compilations* — it grows
     on first use and on recompilation after LRU eviction, never on a hit.
+
+    All bookkeeping is lock-protected so a background worker can install
+    plans while the dispatch path reads; compilations themselves are
+    serialized through a dedicated lock (the pipeline mutates shared
+    ShapeGraph memo tables).
     """
 
     def __init__(self, space: BucketSpace,
                  compile_fn: Callable[[BucketKey, Dict[str, Interval]],
                                       BucketPlan],
-                 *, max_live: int = 16):
+                 *, max_live: int = 16,
+                 background: bool = False,
+                 fallback: Optional[BucketPlan] = None):
         if max_live < 1:
             raise ValueError(f"max_live must be >= 1, got {max_live}")
+        if background and fallback is None:
+            raise ValueError(
+                "background=True requires a whole-range fallback plan")
         self.space = space
         self.max_live = max_live
         self._compile_fn = compile_fn
@@ -88,50 +128,187 @@ class SpecializationTable:
         self.misses = 0
         self.specialize_count = 0
         self.evictions = 0
+        # background specialization
+        self.background = background
+        self.fallback = fallback
+        self.fallback_serves = 0          # misses answered by the fallback
+        self._lock = threading.RLock()    # table bookkeeping
+        self._compile_lock = threading.Lock()  # serializes pipeline runs
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._inflight: Dict[BucketKey, Future] = {}
+        # buckets whose background compile raised: not resubmitted (the
+        # fallback keeps serving their traffic), surfaced on the next
+        # synchronous touch — get()/warmup()/drain_background()
+        self._failed: Dict[BucketKey, BaseException] = {}
+        # requests currently executing (see request_began/request_ended):
+        # the background worker defers compiles while this is nonzero
+        self._serving = 0
 
     # -- dispatch --------------------------------------------------------------
     def key_of(self, env: Mapping[str, int]) -> BucketKey:
         return self.space.key_of(env)
 
     def lookup(self, env: Mapping[str, int]) -> Tuple[BucketPlan, bool]:
-        """Dispatch an env: ``(plan, hit)``.  Miss compiles the bucket."""
+        """Dispatch an env: ``(plan, hit)``.
+
+        A miss compiles the bucket synchronously — or, in background mode,
+        schedules the compile on the worker and returns the whole-range
+        fallback plan immediately (``hit`` is still ``False``)."""
         key = self.space.key_of(env)
-        bp = self._plans.get(key)
-        if bp is not None:
-            self.hits += 1
-            self._plans.move_to_end(key)
-            return bp, True
-        self.misses += 1
+        with self._lock:
+            bp = self._plans.get(key)
+            if bp is not None:
+                self.hits += 1
+                self._plans.move_to_end(key)
+                return bp, True
+            self.misses += 1
+            if self.background:
+                self._submit_background(key)
+                self.fallback_serves += 1
+                return self.fallback, False
         return self._specialize(key), False
 
     def get(self, key: BucketKey) -> BucketPlan:
-        """Plan for a bucket key, compiling if needed (no hit/miss stats)."""
-        bp = self._plans.get(key)
-        if bp is not None:
-            self._plans.move_to_end(key)
-            return bp
+        """Plan for a bucket key, compiling if needed (no hit/miss stats).
+
+        Synchronous even on a background table: an in-flight background
+        compile is awaited rather than duplicated."""
+        with self._lock:
+            bp = self._plans.get(key)
+            if bp is not None:
+                self._plans.move_to_end(key)
+                return bp
+            failed = self._failed.get(key)
+            if failed is not None:
+                raise failed
+            fut = self._inflight.get(key)
+        if fut is not None:
+            fut.result()                  # propagate compile errors
+            with self._lock:
+                bp = self._plans.get(key)
+            if bp is not None:
+                return bp
         return self._specialize(key)
 
     def peek(self, key: BucketKey) -> Optional[BucketPlan]:
         """Cached plan or ``None`` — never compiles, never reorders LRU."""
-        return self._plans.get(key)
+        with self._lock:
+            return self._plans.get(key)
 
     def _specialize(self, key: BucketKey) -> BucketPlan:
-        bp = self._compile_fn(key, self.space.ranges_of(key))
-        self.specialize_count += 1
-        self._bounds[key] = bp.arena_bound_bytes
-        self._plans[key] = bp
-        while len(self._plans) > self.max_live:
-            self._plans.popitem(last=False)
-            self.evictions += 1
+        with self._compile_lock:
+            with self._lock:              # a racer may have installed it
+                bp = self._plans.get(key)
+            if bp is not None:
+                return bp
+            bp = self._compile_fn(key, self.space.ranges_of(key))
+            # install before releasing the compile lock: a background
+            # worker acquiring it next must see the bucket as resident
+            self._install(key, bp)
         return bp
+
+    def _install(self, key: BucketKey, bp: BucketPlan) -> None:
+        """Atomically swap a compiled plan into the table (LRU applies)."""
+        with self._lock:
+            self.specialize_count += 1
+            self._bounds[key] = bp.arena_bound_bytes
+            self._plans[key] = bp
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.max_live:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+
+    # -- background specialization ---------------------------------------------
+    def _submit_background(self, key: BucketKey) -> None:
+        """Schedule one compile for ``key`` unless resident, in flight, or
+        already failed (a deterministic pipeline error would otherwise be
+        retried forever, burning a core while serving degrades silently).
+        Caller holds ``self._lock``."""
+        if key in self._plans or key in self._inflight or key in self._failed:
+            return
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="specialize")
+        fut = self._pool.submit(self._compile_and_install, key)
+        self._inflight[key] = fut
+
+    def request_began(self) -> None:
+        """Dispatch path: a request is about to execute its plan."""
+        with self._lock:
+            self._serving += 1
+
+    def request_ended(self) -> None:
+        with self._lock:
+            self._serving -= 1
+
+    def _compile_and_install(self, key: BucketKey) -> BucketKey:
+        try:
+            # defer (bounded) until no request is mid-execution, so the
+            # Python-heavy pipeline never steals the GIL from a serve
+            deadline = time.monotonic() + _BACKGROUND_MAX_DEFER_S
+            while time.monotonic() < deadline:
+                with self._lock:
+                    busy = self._serving > 0
+                if not busy:
+                    break
+                time.sleep(_BACKGROUND_POLL_S)
+            with self._compile_lock:
+                with self._lock:
+                    resident = key in self._plans
+                if not resident:
+                    bp = self._compile_fn(key, self.space.ranges_of(key))
+                    self._install(key, bp)
+            return key
+        except BaseException as e:
+            with self._lock:
+                self._failed[key] = e
+            raise
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+
+    @property
+    def n_pending(self) -> int:
+        """Background specializations currently in flight."""
+        with self._lock:
+            return len(self._inflight)
+
+    def drain_background(self, timeout: Optional[float] = None) -> List[BucketKey]:
+        """Block until every background compile in flight *at call time*
+        lands (compiles submitted by traffic arriving mid-drain belong to
+        the next drain, so the call is bounded under sustained misses).
+
+        Returns the drained bucket keys (first-submitted order) and
+        re-raises the first worker exception, if any.  ``timeout`` is one
+        global deadline for the whole drain.  After a clean drain the
+        table state is indistinguishable from having compiled those
+        buckets synchronously."""
+        with self._lock:
+            snapshot = dict(self._inflight)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        drained: List[BucketKey] = []
+        for key, fut in snapshot.items():
+            remaining = None if deadline is None                 else max(0.0, deadline - time.monotonic())
+            done, not_done = futures_wait([fut], timeout=remaining)
+            if not_done:
+                raise TimeoutError(
+                    f"background specialization of bucket {key} still "
+                    f"pending after {timeout}s (drained so far: {drained})")
+            drained.append(key)
+            fut.result()                  # surface fresh compile errors
+        with self._lock:
+            stale = next(iter(self._failed.values()), None)
+        if stale is not None:
+            raise stale                   # surface earlier failures
+        return drained
 
     # -- warmup & introspection ------------------------------------------------
     def warmup(self, envs: Iterable[Mapping[str, int]]) -> List[BucketKey]:
         """Compile the buckets containing ``envs`` before traffic arrives.
 
-        Synchronous and idempotent (already-compiled buckets are skipped);
-        returns the distinct bucket keys now resident, in first-seen order.
+        Synchronous and idempotent (already-compiled buckets are skipped,
+        in-flight background compiles are awaited, not duplicated); returns
+        the distinct bucket keys now resident, in first-seen order.
         """
         keys: List[BucketKey] = []
         for env in envs:
@@ -147,24 +324,35 @@ class SpecializationTable:
         Bounds are remembered across LRU eviction, so only a bucket never
         compiled before pays a pipeline run here; a known bucket answers
         from the bound cache without touching (or evicting from) the plan
-        cache."""
-        if key in self._bounds:
-            return self._bounds[key]
+        cache.  A background table never stalls the caller: an unknown
+        bucket bound schedules the compile and conservatively answers with
+        the whole-range bound, which every bucket is guaranteed to fit."""
+        with self._lock:
+            if key in self._bounds:
+                return self._bounds[key]
+            if self.background:
+                self._submit_background(key)
+                return self.fallback.arena_bound_bytes
         return self.get(key).arena_bound_bytes
 
     @property
     def compiled_keys(self) -> List[BucketKey]:
-        return list(self._plans)
+        with self._lock:
+            return list(self._plans)
 
     @property
     def n_buckets(self) -> int:
         return self.space.n_buckets
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "specialize_count": self.specialize_count,
-                "evictions": self.evictions,
-                "resident": len(self._plans)}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "specialize_count": self.specialize_count,
+                    "evictions": self.evictions,
+                    "resident": len(self._plans),
+                    "fallback_serves": self.fallback_serves,
+                    "background_pending": len(self._inflight),
+                    "background_failed": len(self._failed)}
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"SpecializationTable({self.space!r}, "

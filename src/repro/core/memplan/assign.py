@@ -244,21 +244,34 @@ def build_arena_plan(graph: Graph, order: Sequence[Node],
     sg = shape_graph if shape_graph is not None else ShapeGraph()
     liveness = analyze_liveness(graph, order, donate_inputs=donate_inputs)
     rep_env = _representative_env(graph, sg)
+    # many values share interned size exprs: evaluate each once per compile
+    _rep_memo: Dict[int, int] = {}
+
+    def rep_eval(e) -> int:
+        v = _rep_memo.get(e.uid)
+        if v is None:
+            v = e.evaluate(rep_env)
+            _rep_memo[e.uid] = v
+        return v
 
     slots: List[SlotInfo] = []
     assignment: Dict[int, SlotAssignment] = {}
     # canonical size expr -> sids whose candidate set contains it (the
     # exact-match fast path: identical sizes are an EQ fit by definition)
     by_expr: Dict[SymbolicExpr, List[int]] = {}
+    # (rep_size, sid) sorted: placement scans candidate hosts from a value's
+    # own representative size upward instead of testing every slot
+    size_index: List[Tuple[int, int]] = []
 
     def new_slot(iv: LiveInterval, external: bool) -> SlotInfo:
         lo, hi = sg.bounds_of(iv.nbytes_expr)
         s = SlotInfo(sid=len(slots), external=external,
                      size_exprs=[iv.nbytes_expr],
                      size_lo=lo, size_hi=hi,
-                     rep_size=iv.nbytes_expr.evaluate(rep_env))
+                     rep_size=rep_eval(iv.nbytes_expr))
         s.add_member(iv.vid, iv.start, iv.end)
         slots.append(s)
+        bisect.insort(size_index, (s.rep_size, s.sid))
         by_expr.setdefault(sg.canonicalize(iv.nbytes_expr), []).append(s.sid)
         return s
 
@@ -275,7 +288,7 @@ def build_arena_plan(graph: Graph, order: Sequence[Node],
     # slots, smaller ones fill the gaps
     intermediates = sorted(
         (iv for iv in liveness.values() if not iv.external),
-        key=lambda iv: (-iv.nbytes_expr.evaluate(rep_env), iv.start, iv.vid))
+        key=lambda iv: (-rep_eval(iv.nbytes_expr), iv.start, iv.vid))
 
     plan = ArenaPlan(slots=slots, assignment=assignment, liveness=liveness,
                      donate_inputs=donate_inputs, horizon=len(order))
@@ -284,7 +297,7 @@ def build_arena_plan(graph: Graph, order: Sequence[Node],
         plan.n_assigned += 1
         chosen: Optional[SlotInfo] = None
         provable = False
-        v_rep = iv.nbytes_expr.evaluate(rep_env)
+        v_rep = rep_eval(iv.nbytes_expr)
         v_lo, v_hi = sg.bounds_of(iv.nbytes_expr)
 
         # 1. exact-expression match (EQ fit, no comparison machinery needed)
@@ -295,12 +308,17 @@ def build_arena_plan(graph: Graph, order: Sequence[Node],
                 break
 
         if chosen is None:
-            hosts = [s for s in slots if s.can_host(iv.start, iv.end)]
-
-            # 2. provable fit via symbolic comparison, tightest slot first
+            # 2. provable fit via symbolic comparison, tightest slot first —
+            #    scan the (rep_size, sid) index upward from the value's own
+            #    representative size; liveness overlap is checked lazily so
+            #    slots below v_rep are never bisected at all
             probes = 0
-            for s in sorted(hosts, key=lambda s: s.rep_size):
-                if s.rep_size < v_rep or probes >= _MAX_FIT_PROBES:
+            start = bisect.bisect_left(size_index, (v_rep, -1))
+            for j in range(start, len(size_index)):
+                if probes >= _MAX_FIT_PROBES:
+                    break
+                s = slots[size_index[j][1]]
+                if not s.can_host(iv.start, iv.end):
                     continue
                 probes += 1
                 # interval prefilter: hi(value) <= lo(slot size) proves fit
@@ -318,19 +336,30 @@ def build_arena_plan(graph: Graph, order: Sequence[Node],
             #    env and may grow it.  External (donated) buffers cannot
             #    grow, so they only take provable members.
             if chosen is None:
-                growable = [s for s in hosts if not s.external]
-                big = [s for s in growable if s.rep_size >= v_rep]
-                if big:
-                    chosen = min(big, key=lambda s: s.rep_size)
-                elif growable:
-                    chosen = max(growable, key=lambda s: s.rep_size)
+                for j in range(start, len(size_index)):   # tightest first
+                    s = slots[size_index[j][1]]
+                    if not s.external and s.can_host(iv.start, iv.end):
+                        chosen = s
+                        break
+                if chosen is None:   # nothing at least v_rep: grow the biggest
+                    growable = [s for s in slots
+                                if not s.external
+                                and s.can_host(iv.start, iv.end)]
+                    if growable:
+                        chosen = max(growable, key=lambda s: s.rep_size)
                 if chosen is not None and iv.nbytes_expr not in chosen.size_exprs:
                     chosen.size_exprs.append(iv.nbytes_expr)
                     chosen.size_lo = None if (chosen.size_lo is None or v_lo is None) \
                         else max(chosen.size_lo, v_lo)
                     chosen.size_hi = None if (chosen.size_hi is None or v_hi is None) \
                         else max(chosen.size_hi, v_hi)
-                    chosen.rep_size = max(chosen.rep_size, v_rep)
+                    if v_rep > chosen.rep_size:
+                        i = bisect.bisect_left(
+                            size_index, (chosen.rep_size, chosen.sid))
+                        del size_index[i]
+                        chosen.rep_size = v_rep
+                        bisect.insort(size_index,
+                                      (chosen.rep_size, chosen.sid))
                     bucket = by_expr.setdefault(canon, [])
                     if chosen.sid not in bucket:
                         bucket.append(chosen.sid)

@@ -1,9 +1,11 @@
 from .planner import ExecutionPlan, build_plan
 from .runtime import EvictionDecision, RuntimeRematPolicy
-from .search import CandidateInfo, RecomputePlan, RecomputeSearcher, node_flops
+from .search import (CandidateInfo, RecomputePlan, RecomputeSearcher,
+                     node_flops, respecialize_candidates)
 
 __all__ = [
     "ExecutionPlan", "build_plan",
     "EvictionDecision", "RuntimeRematPolicy",
     "CandidateInfo", "RecomputePlan", "RecomputeSearcher", "node_flops",
+    "respecialize_candidates",
 ]

@@ -9,7 +9,7 @@ candidate tensor (realised as the interpreter's materialize-on-demand).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 from ..ir.graph import Graph, Node
 from ..scheduling.scheduler import ScheduleResult
@@ -74,12 +74,28 @@ def build_plan(graph: Graph, schedule: ScheduleResult,
                shape_graph: Optional[ShapeGraph] = None,
                *, enable_remat: bool = True,
                max_subgraph: int = 24,
-               arena_plan: Optional["ArenaPlan"] = None) -> ExecutionPlan:
+               arena_plan: Optional["ArenaPlan"] = None,
+               remat_expr_cache: Optional[Dict] = None,
+               cand_keys_out: Optional[Dict[int, frozenset]] = None,
+               parent_remat: Optional[Tuple] = None) -> ExecutionPlan:
+    """``cand_keys_out``/``parent_remat`` thread the incremental-compile
+    protocol into the search: the former collects each candidate's compare
+    keys, the latter — ``(parent shape graph, parent candidates, parent
+    candidate keys)`` — lets :meth:`RecomputeSearcher.explore` reuse every
+    parent candidate whose verdicts are unchanged under ``shape_graph``."""
     sg = shape_graph if shape_graph is not None else ShapeGraph()
     candidates: Dict[int, CandidateInfo] = {}
     if enable_remat:
-        searcher = RecomputeSearcher(graph, sg, max_subgraph=max_subgraph)
-        candidates = searcher.explore(schedule.order)
+        searcher = RecomputeSearcher(graph, sg, max_subgraph=max_subgraph,
+                                     expr_cache=remat_expr_cache)
+        p_sg = p_cands = p_keys = None
+        if parent_remat is not None:
+            p_sg, p_cands, p_keys = parent_remat
+        candidates = searcher.explore(schedule.order,
+                                      cand_keys_out=cand_keys_out,
+                                      parent_sg=p_sg,
+                                      parent_cands=p_cands,
+                                      parent_cand_keys=p_keys)
     return ExecutionPlan(graph=graph, order=list(schedule.order),
                          shape_graph=sg, candidates=candidates,
                          arena_plan=arena_plan)

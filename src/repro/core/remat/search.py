@@ -15,7 +15,7 @@ always available and memory-neutral.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from ..ir.graph import Graph, Node, Value
@@ -97,15 +97,33 @@ def static_regen_method(cand: CandidateInfo) -> Optional[str]:
 
 
 class RecomputeSearcher:
+    """``expr_cache`` (optional, shareable) memoizes the *expressions* the
+    search builds — subgraph impacts, source lists, per-node flops — keyed
+    on graph structure only.  They are range-independent, so bucketed
+    specialization passes one cache to every per-bucket search: each
+    bucket re-decides the (cheap, memoized) ``compare`` verdicts under its
+    narrowed ranges but never rebuilds a polynomial the whole-range search
+    already assembled."""
+
     def __init__(self, graph: Graph, shape_graph: Optional[ShapeGraph] = None,
-                 *, max_subgraph: int = 24):
+                 *, max_subgraph: int = 24,
+                 expr_cache: Optional[Dict] = None):
         self.g = graph
         self.sg = shape_graph if shape_graph is not None else ShapeGraph()
         self.max_subgraph = max_subgraph
         self._output_ids = {v.id for v in graph.outputs}
+        self._cache: Dict = expr_cache if expr_cache is not None else {}
+        # pick-the-biggest-source results, keyed by the tuple of candidate
+        # *size-expression* uids.  Transformer layers repeat the same size
+        # tuples hundreds of times; the argmax depends only on the sizes and
+        # this graph's verdicts, so it is shared per searcher (per compile),
+        # not across shape graphs.  Each entry stores the compare keys its
+        # argmax consulted: a memo hit replays them into any active
+        # dependency recording (per-candidate reuse would otherwise miss
+        # verdicts a flipped bucket could change)
+        self._pick_memo: Dict[Tuple[int, ...], Tuple[int, frozenset]] = {}
 
     def _sources(self, nodes: Set[Node]) -> List[Value]:
-        node_ids = {n.id for n in nodes}
         produced = {ov.id for n in nodes for ov in n.outvals}
         srcs: Dict[int, Value] = {}
         for n in nodes:
@@ -122,9 +140,26 @@ class RecomputeSearcher:
             imp = imp - src.nbytes_expr
         return imp
 
+    def _node_flops(self, n: Node) -> SymbolicExpr:
+        key = ("nflops", n.id)
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = node_flops(n)
+            self._cache[key] = hit
+        return hit
+
     def search(self, target: Value,
                bytes_interval: Optional[Interval] = None) -> Optional[RecomputePlan]:
-        """Greedy backward growth, keeping the best symbolic impact seen."""
+        """Greedy backward growth, keeping the best symbolic impact seen.
+
+        The subgraph's impact expression and source set are maintained
+        *incrementally* as nodes are absorbed — absorbing ``p`` removes the
+        sources ``p`` produces (their bytes return to the impact) and adds
+        ``p``'s own unproduced inputs — and each grown state is memoized in
+        ``expr_cache`` keyed on ``(target, subgraph)``, so re-searching the
+        same region (another bucket's compile, an overlapping candidate)
+        replays cached polynomials instead of rebuilding them term by term.
+        """
         if target.producer is None:
             return None
         # bounds-based compile-time prune: a target whose worst-case byte
@@ -133,46 +168,109 @@ class RecomputeSearcher:
             bytes_interval = self.sg.interval_of(target.nbytes_expr)
         if bytes_interval.hi == 0:
             return None
-        sub: Set[Node] = {target.producer}
-        best_nodes = set(sub)
-        best_imp = self._impact(target, sub)
-        while len(sub) < self.max_subgraph:
+        p0 = target.producer
+        sub_ids = frozenset((p0.id,))
+        sub_nodes: Set[Node] = {p0}
+        produced = {ov.id for ov in p0.outvals}
+        key = (target.id, sub_ids)
+        hit = self._cache.get(key)
+        if hit is not None:
+            imp, srcs_t, flops = hit
+            srcs = {v.id: v for v in srcs_t}
+        else:
+            srcs = {}
+            imp = target.nbytes_expr
+            for iv in p0.invals:
+                if iv.id in produced or iv.id in srcs:
+                    continue
+                srcs[iv.id] = iv
+                if not iv.is_materialized_input():
+                    imp = imp - iv.nbytes_expr
+            flops = self._node_flops(p0)
+            self._cache[key] = (imp, tuple(srcs.values()), flops)
+        best = (imp, sub_ids, set(sub_nodes), flops)
+        while len(sub_ids) < self.max_subgraph:
             # pick the most expensive non-always-live source to absorb
-            srcs = [s for s in self._sources(sub)
+            cand = [s for s in srcs.values()
                     if not s.is_materialized_input() and s.producer is not None]
-            if not srcs:
+            if not cand:
                 break
-            pick = srcs[0]
-            for s in srcs[1:]:
-                if self.sg.compare(s.nbytes_expr, pick.nbytes_expr) is Cmp.GT:
-                    pick = s
-            if pick.producer in sub:
+            sizes = tuple(s.nbytes_expr.uid for s in cand)
+            hit = self._pick_memo.get(sizes)
+            if hit is not None:
+                idx, pick_keys = hit
+                self.sg.note_cmp_keys(pick_keys)
+            else:
+                with self.sg.record_cmp_keys() as pick_keys:
+                    idx = 0
+                    for j in range(1, len(cand)):
+                        if self.sg.compare(cand[j].nbytes_expr,
+                                           cand[idx].nbytes_expr) is Cmp.GT:
+                            idx = j
+                self._pick_memo[sizes] = (idx, frozenset(pick_keys))
+            pick = cand[idx]
+            p = pick.producer
+            if p.id in sub_ids:
                 break
-            sub.add(pick.producer)
-            imp = self._impact(target, sub)
-            if self.sg.compare(imp, best_imp) is Cmp.GT:
-                best_imp, best_nodes = imp, set(sub)
+            sub_ids = sub_ids | {p.id}
+            sub_nodes.add(p)
+            key = (target.id, sub_ids)
+            hit = self._cache.get(key)
+            if hit is not None:
+                imp, srcs_t, flops = hit
+                srcs = {v.id: v for v in srcs_t}
+                for ov in p.outvals:
+                    produced.add(ov.id)
+            else:
+                for ov in p.outvals:
+                    produced.add(ov.id)
+                    s = srcs.pop(ov.id, None)
+                    if s is not None and not s.is_materialized_input():
+                        imp = imp + s.nbytes_expr   # no longer a source
+                for iv in p.invals:
+                    if iv.id in produced or iv.id in srcs:
+                        continue
+                    srcs[iv.id] = iv
+                    if not iv.is_materialized_input():
+                        imp = imp - iv.nbytes_expr
+                flops = flops + self._node_flops(p)
+                self._cache[key] = (imp, tuple(srcs.values()), flops)
+            if self.sg.compare(imp, best[0]) is Cmp.GT:
+                best = (imp, sub_ids, set(sub_nodes), flops)
             # early exit: impact can't improve once all sources are always-live
+        best_imp, best_ids, best_nodes, best_flops = best
         # beneficial iff impact definitely > 0
         if self.sg.compare(best_imp, ZERO) is not Cmp.GT:
             return None
         order = [n for n in self.g.nodes if n in best_nodes]  # topo by construction
-        flops = ZERO
-        for n in order:
-            flops = flops + node_flops(n)
-        sources = tuple(s.id for s in self._sources(best_nodes))
-        return RecomputePlan(target, tuple(n.id for n in order), sources,
-                             best_imp, flops,
+        node_ids = tuple(n.id for n in order)
+        sources = tuple(s.id for s in self._cache[(target.id, best_ids)][1])
+        return RecomputePlan(target, node_ids, sources,
+                             best_imp, best_flops,
                              impact_interval=self.sg.interval_of(best_imp),
-                             flops_interval=self.sg.interval_of(flops))
+                             flops_interval=self.sg.interval_of(best_flops))
 
     # -- full exploration (paper: "explores all rematerialization candidates") --
-    def explore(self, order: Sequence[Node]) -> Dict[int, CandidateInfo]:
+    def explore(self, order: Sequence[Node], *,
+                cand_keys_out: Optional[Dict[int, frozenset]] = None,
+                parent_sg: Optional[ShapeGraph] = None,
+                parent_cands: Optional[Dict[int, CandidateInfo]] = None,
+                parent_cand_keys: Optional[Dict[int, frozenset]] = None,
+                ) -> Dict[int, CandidateInfo]:
         """Search regeneration plans for every remat candidate.
 
         Candidates are intermediate values with at least one consumer that is
         not their producer's immediate successor (i.e. they stay live across
         other ops) and that are not graph outputs.
+
+        ``cand_keys_out`` (a dict to fill) records, per candidate, the
+        compare keys its search consulted.  With ``parent_*`` set, the
+        exploration is **incremental**: a candidate whose parent search
+        consulted only verdicts that are unchanged under this (narrowed)
+        graph would retrace the identical growth path, so its parent result
+        is reused with intervals refreshed and the bounds prunes re-applied
+        (:func:`respecialize_candidates` logic) — only candidates an
+        actually-flipped verdict touches are re-searched.
         """
         pos = {n.id: i for i, n in enumerate(order)}
         out: Dict[int, CandidateInfo] = {}
@@ -190,8 +288,21 @@ class RecomputeSearcher:
             bytes_iv = self.sg.interval_of(v.nbytes_expr)
             if bytes_iv.hi == 0:
                 continue  # provably empty for every env: never profitable
-            info = CandidateInfo(value=v,
-                                 recompute=self.search(v, bytes_iv),
+            if parent_cands is not None and v.id in parent_cands:
+                pk = (parent_cand_keys or {}).get(v.id)
+                if pk is not None and self.sg.verdicts_match(parent_sg, pk):
+                    out[v.id] = _respecialize_one(parent_cands[v.id],
+                                                  self.sg, bytes_iv)
+                    if cand_keys_out is not None:
+                        cand_keys_out[v.id] = pk
+                    continue
+            if cand_keys_out is not None:
+                with self.sg.record_cmp_keys() as keys:
+                    rp = self.search(v, bytes_iv)
+                cand_keys_out[v.id] = frozenset(keys)
+            else:
+                rp = self.search(v, bytes_iv)
+            info = CandidateInfo(value=v, recompute=rp,
                                  bytes_interval=bytes_iv)
             if info.recompute is not None and \
                     static_regen_method(info) == "offload":
@@ -203,3 +314,50 @@ class RecomputeSearcher:
                                      recompute_pruned_by_bounds=True)
             out[v.id] = info
         return out
+
+
+def _respecialize_one(info: CandidateInfo, sg: ShapeGraph,
+                      bytes_iv: Interval) -> CandidateInfo:
+    """One candidate's intervals refreshed + bounds prunes re-applied under
+    a narrowed graph (see :func:`respecialize_candidates`)."""
+    from dataclasses import replace
+
+    rp = info.recompute
+    if rp is not None:
+        rp = replace(rp,
+                     impact_interval=sg.interval_of(rp.impact),
+                     flops_interval=sg.interval_of(rp.flops))
+    new = CandidateInfo(value=info.value, recompute=rp,
+                        bytes_interval=bytes_iv,
+                        recompute_pruned_by_bounds=
+                        info.recompute_pruned_by_bounds)
+    if new.recompute is not None and static_regen_method(new) == "offload":
+        new = CandidateInfo(value=info.value, recompute=None,
+                            bytes_interval=bytes_iv,
+                            recompute_pruned_by_bounds=True)
+    return new
+
+
+def respecialize_candidates(candidates: Dict[int, CandidateInfo],
+                            sg: ShapeGraph) -> Dict[int, CandidateInfo]:
+    """Re-derive a candidate set's interval data under a narrowed graph.
+
+    The *structure* of the search result — which subgraph regenerates each
+    candidate — depends only on ``ShapeGraph.compare`` verdicts; when the
+    incremental compile path has proven those unchanged under a bucket's
+    narrowed ranges, re-running :meth:`RecomputeSearcher.explore` would
+    reproduce the same subgraphs.  This reproduces its *output* instead:
+    refresh every stored interval under the narrowed bounds (tighter
+    buckets pin more regen decisions statically) and re-apply the two
+    bounds-based prunes, both of which are monotone under narrowing —
+    ``bytes_interval.hi == 0`` only becomes true as ranges shrink, and a
+    parent-pruned recompute plan (reload provably cheaper everywhere) stays
+    pruned on every sub-range.
+    """
+    out: Dict[int, CandidateInfo] = {}
+    for vid, info in candidates.items():
+        bytes_iv = sg.interval_of(info.value.nbytes_expr)
+        if bytes_iv.hi == 0:
+            continue          # explore() would have skipped it outright
+        out[vid] = _respecialize_one(info, sg, bytes_iv)
+    return out

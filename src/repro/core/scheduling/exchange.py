@@ -19,13 +19,15 @@ from typing import Dict, List, Sequence
 from ..ir.graph import Graph, Node
 
 
-def _node_effects(g: Graph, order: Sequence[Node], env: Dict[str, int]):
+def _node_effects(g: Graph, order: Sequence[Node], env: Dict[str, int],
+                  nbytes: Dict[int, int] = None):
     """Per-node (alloc_bytes, freed_bytes) under `order` at `env`."""
     output_ids = {v.id for v in g.outputs}
     pos = {n.id: i for i, n in enumerate(order)}
     remaining = {v.id: sum(1 for c in v.consumers if c.id in pos)
                  for v in g.values}
-    nbytes = {v.id: v.nbytes_expr.evaluate(env) for v in g.values}
+    if nbytes is None:
+        nbytes = {v.id: v.nbytes_expr.evaluate(env) for v in g.values}
     alloc, freed = [], []
     for n in order:
         a = sum(nbytes[ov.id] for ov in n.outvals
@@ -64,8 +66,13 @@ def exchange_pass(g: Graph, order: List[Node], envs: Sequence[Dict[str, int]],
     every probe env.  Returns a (possibly) improved valid order."""
     order = list(order)
     n = len(order)
+    # concrete byte sizes are order-invariant: evaluate once per probe env,
+    # not once per sweep
+    nbytes_per_env = [{v.id: v.nbytes_expr.evaluate(env) for v in g.values}
+                      for env in envs]
     for _ in range(max_sweeps):
-        effects = [_node_effects(g, order, env) for env in envs]
+        effects = [_node_effects(g, order, env, nbytes)
+                   for env, nbytes in zip(envs, nbytes_per_env)]
         swapped = False
         i = 0
         while i < n - 1:

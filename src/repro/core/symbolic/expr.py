@@ -11,10 +11,19 @@ Representation: ``terms`` maps a *monomial* — a sorted tuple of
 ``(atom, exponent)`` pairs — to an integer coefficient.  The empty monomial
 is the constant term.  This canonical form makes equality, addition and
 multiplication exact, which is what the paper's comparisons build on.
+
+Expressions are **hash-consed**: construction interns the canonical term
+tuple in a weak table, so structurally-equal expressions are (almost
+always) the *same* object, equality fast-paths on identity, the
+structural hash is computed once, and every expression carries a stable
+``uid`` that compile-path memo tables (``ShapeGraph``) key on.  The
+common arithmetic cases — adding 0, multiplying by a constant, folding
+constants — skip the general polynomial merge entirely.
 """
 from __future__ import annotations
 
 import itertools
+import weakref
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Dict, Iterable, Mapping, Optional, Tuple, Union
 
@@ -106,19 +115,47 @@ def _mono_mul(a: Monomial, b: Monomial) -> Monomial:
 
 
 class SymbolicExpr:
-    """Canonical integer polynomial over atoms.  Immutable."""
+    """Canonical integer polynomial over atoms.  Immutable, hash-consed."""
 
-    __slots__ = ("terms", "_hash")
+    __slots__ = ("terms", "_hash", "uid", "_atoms", "__weakref__")
 
-    def __init__(self, terms: Mapping[Monomial, int]):
+    # canonical terms tuple -> the one live instance carrying it.  Weak so
+    # transient compile-time expressions do not accumulate forever; memo
+    # tables that key on ``uid`` hold strong refs to what they cache.
+    _intern: "weakref.WeakValueDictionary" = weakref.WeakValueDictionary()
+    _uid_counter = itertools.count(1)
+    # small-constant cache (strong refs: these recur constantly)
+    _const_cache: Dict[int, "SymbolicExpr"] = {}
+
+    def __new__(cls, terms: Mapping[Monomial, int]):
         clean = {m: c for m, c in terms.items() if c != 0}
-        object.__setattr__(self, "terms", tuple(sorted(clean.items(), key=lambda kv: tuple(map(_mono_key, kv[0])))))
-        object.__setattr__(self, "_hash", None)
+        # sort monomials by (atom repr, exponent) pairs: exponents must
+        # participate or `s` and `s^2` tie and the term order (hence the
+        # canonical form) would depend on insertion order
+        key = tuple(sorted(
+            clean.items(),
+            key=lambda kv: tuple((repr(a), e) for a, e in kv[0])))
+        self = cls._intern.get(key)
+        if self is not None:
+            return self
+        self = object.__new__(cls)
+        self.terms = key
+        self._hash = hash(key)
+        self.uid = next(cls._uid_counter)
+        self._atoms = None
+        cls._intern[key] = self
+        return self
 
     # -- constructors -------------------------------------------------------
     @staticmethod
     def constant(c: int) -> "SymbolicExpr":
-        return SymbolicExpr({_EMPTY: int(c)})
+        c = int(c)
+        e = SymbolicExpr._const_cache.get(c)
+        if e is None:
+            e = SymbolicExpr({_EMPTY: c})
+            if -4096 <= c <= 4096 or len(SymbolicExpr._const_cache) < 65536:
+                SymbolicExpr._const_cache[c] = e
+        return e
 
     @staticmethod
     def var(name: str) -> "SymbolicExpr":
@@ -151,11 +188,8 @@ class SymbolicExpr:
         return None
 
     def free_vars(self) -> frozenset:
-        out: frozenset = frozenset()
-        for mono, _ in self.terms:
-            for atom, _exp in mono:
-                out |= atom.free_vars()
-        return out
+        return frozenset(a.name for a in self.atom_closure()
+                         if isinstance(a, Atom))
 
     def atoms(self) -> frozenset:
         out = set()
@@ -164,9 +198,35 @@ class SymbolicExpr:
                 out.add(atom)
         return frozenset(out)
 
+    def atom_closure(self) -> frozenset:
+        """All atoms appearing at any depth (OpAtom operands included).
+
+        Cached on the interned instance — this is the substitution fast
+        path's disjointness test and the memo tables' dependency set.
+        """
+        if self._atoms is None:
+            out = set()
+            for mono, _ in self.terms:
+                for atom, _exp in mono:
+                    out.add(atom)
+                    if isinstance(atom, OpAtom):
+                        for op in atom.operands:
+                            out |= op.atom_closure()
+            self._atoms = frozenset(out)
+        return self._atoms
+
     # -- algebra -------------------------------------------------------------
     def __add__(self, other: "ExprLike") -> "SymbolicExpr":
-        other = SymbolicExpr.wrap(other)
+        if isinstance(other, int):
+            if other == 0:
+                return self
+            other = SymbolicExpr.constant(other)
+        elif not isinstance(other, SymbolicExpr):
+            other = SymbolicExpr.wrap(other)
+        if not other.terms:
+            return self
+        if not self.terms:
+            return other
         acc = dict(self.terms)
         for m, c in other.terms:
             acc[m] = acc.get(m, 0) + c
@@ -184,7 +244,20 @@ class SymbolicExpr:
         return SymbolicExpr.wrap(other) + (-self)
 
     def __mul__(self, other: "ExprLike") -> "SymbolicExpr":
+        if isinstance(other, int):
+            if other == 1:
+                return self
+            if other == 0:
+                return ZERO
+            return SymbolicExpr({m: c * other for m, c in self.terms})
         other = SymbolicExpr.wrap(other)
+        # constant × polynomial: scale coefficients, skip the double loop
+        oc = other.constant_value()
+        if oc is not None:
+            return self * oc
+        sc = self.constant_value()
+        if sc is not None:
+            return other * sc
         acc: Dict[Monomial, int] = {}
         for m1, c1 in self.terms:
             for m2, c2 in other.terms:
@@ -247,6 +320,9 @@ class SymbolicExpr:
 
     def substitute(self, mapping: Mapping[AtomT, "SymbolicExpr"]) -> "SymbolicExpr":
         """Replace atoms by expressions (used by the shape graph's rewriting)."""
+        # fast path: nothing to replace anywhere in this expression
+        if not mapping or self.atom_closure().isdisjoint(mapping):
+            return self
         out = SymbolicExpr.constant(0)
         for mono, coeff in self.terms:
             term = SymbolicExpr.constant(coeff)
@@ -283,6 +359,38 @@ class SymbolicExpr:
         from .intervals import BoundEnv, Interval
 
         env = env_bounds if isinstance(env_bounds, BoundEnv) else BoundEnv(env_bounds)
+        # fast path — size-style polynomials: every coefficient positive,
+        # every atom a plain dim with a nonnegative declared range.  Such a
+        # polynomial is monotone in every dim, so its exact hull is just the
+        # two corner evaluations (no interval products, no .power calls)
+        monotone = True
+        for mono, coeff in self.terms:
+            if coeff < 0:
+                monotone = False
+                break
+            for atom, _exp in mono:
+                if type(atom) is not Atom:
+                    monotone = False
+                    break
+                lo = env.lookup(atom.name).lo
+                if lo is None or lo < 0:
+                    monotone = False
+                    break
+            else:
+                continue
+            break
+        if monotone:
+            lo_env, hi_env, bounded = {}, {}, True
+            for mono, _coeff in self.terms:
+                for atom, _exp in mono:
+                    iv = env.lookup(atom.name)
+                    lo_env[atom.name] = iv.lo
+                    if iv.hi is None:
+                        bounded = False
+                    else:
+                        hi_env[atom.name] = iv.hi
+            return Interval(self.evaluate(lo_env),
+                            self.evaluate(hi_env) if bounded else None)
         total = Interval.point(0)
         for mono, coeff in self.terms:
             term = Interval.point(coeff)
@@ -302,18 +410,19 @@ class SymbolicExpr:
 
     # -- dunder -----------------------------------------------------------------
     def __eq__(self, other: object) -> bool:
+        if self is other:          # interned: the overwhelmingly common case
+            return True
         if isinstance(other, int):
-            return self.terms == SymbolicExpr.constant(other).terms
+            c = self.constant_value()
+            return c is not None and c == other
         if not isinstance(other, SymbolicExpr):
             return NotImplemented
+        # structural fallback: interning is best-effort under threads, so
+        # two live equal instances are possible (rare) and must still match
         return self.terms == other.terms
 
     def __hash__(self) -> int:
-        h = object.__getattribute__(self, "_hash")
-        if h is None:
-            h = hash(self.terms)
-            object.__setattr__(self, "_hash", h)
-        return h
+        return self._hash
 
     def __repr__(self) -> str:
         if not self.terms:

@@ -59,7 +59,9 @@ class BucketBatcher:
     arrival order ping-pongs between bucket plans.  The batcher instead
     queues ``(env, payload)`` requests, keyed by the bucket the env lands
     in (same O(log n) lookup the call path uses), and ``drain()`` returns
-    same-bucket groups, largest first.
+    same-bucket groups — buckets with a resident specialized plan first
+    (so background specialization never blocks hot traffic), largest
+    group first within each class.
 
     ``memory_budget`` enables admission control by bucket: a group whose
     bucket plan carries ``arena_bound_bytes`` above the budget stays
@@ -98,19 +100,30 @@ class BucketBatcher:
         return {key: len(reqs) for key, reqs in self._queue.items()}
 
     def drain(self) -> List[BucketGroup]:
-        """Admitted same-bucket groups, largest first; held groups remain.
+        """Admitted same-bucket groups — compiled buckets first, then by
+        group size; held groups remain.
+
+        Buckets whose specialized plan is already resident dispatch ahead
+        of buckets that would still need a compile: with background
+        specialization that keeps the worker serving specialized traffic
+        at full speed while cold buckets finish compiling off-thread
+        (their requests run on the whole-range fallback only if drained
+        before the swap lands).  Within each class, largest group first.
 
         A group is held when ``memory_budget`` is set and the bucket's
         guaranteed arena bound exceeds it.  Admission asks the table for
         the bound, which compiles a bucket the *first* time it is ever
         seen (bounds are then remembered across plan eviction, so held
-        buckets are not recompiled drain after drain); use
-        ``fn.warmup(envs)`` beforehand to move even that first compile off
-        the serving path.
+        buckets are not recompiled drain after drain) — in background
+        mode it instead schedules the compile and admits against the
+        conservative whole-range bound; use ``fn.warmup(envs)``
+        beforehand to move even that first compile off the serving path.
         """
         admitted: List[BucketGroup] = []
         held: "OrderedDict[Tuple[int, ...], List[Tuple[Dict[str, int], Any]]]" = OrderedDict()
-        order = sorted(self._queue, key=lambda k: -len(self._queue[k]))
+        order = sorted(self._queue,
+                       key=lambda k: (self.table.peek(k) is None,
+                                      -len(self._queue[k])))
         for key in order:
             reqs = self._queue[key]
             bound = self.table.arena_bound_bytes(key)

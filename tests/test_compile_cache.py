@@ -1,0 +1,412 @@
+"""Fast compile path: hash-consed exprs, memoized comparisons, incremental
+bucket specialization, background specialization.
+
+The contracts here are equivalence contracts: every cache layer must be
+*invisible* except for speed —
+
+* interned ``SymbolicExpr``s are equal / hash-equal iff their canonical
+  polynomial forms match (property test);
+* a ``ShapeGraph`` with warm memo tables (including verdicts inherited
+  through ``specialized()``) answers ``compare`` exactly like a freshly
+  built, never-queried graph, across randomized range narrowings
+  (property test);
+* the incremental ``_compile_pipeline`` (parent artifacts, per-candidate
+  remat reuse, schedule post-pass reuse) produces plans equivalent to a
+  cold compile of the same narrowed graph;
+* ``background_specialize=True`` produces bitwise-identical outputs and
+  the same ``specialize_count`` endpoint as synchronous specialization,
+  with ``warmup``/``drain_specializations`` as the deterministic join.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import optimize, symbolic_dims
+from repro.core.api import _compile_pipeline
+from repro.core.ir.trace import trace_to_graph
+from repro.core.scheduling.scheduler import OpScheduler
+from repro.core.symbolic import Cmp, ShapeGraph, SymbolicExpr, \
+    declare_dim_ranges
+
+V = SymbolicExpr.var
+
+
+# -- hash-consing -------------------------------------------------------------
+
+
+# fixed monomial basis over three dims: a coefficient vector is a canonical
+# polynomial, so two vectors match iff the canonical forms match
+def _poly(coeffs):
+    names = ["b", "s", "k"]
+    e = SymbolicExpr.constant(coeffs[0])
+    for name, c in zip(names, coeffs[1:4]):
+        e = e + c * V(name)
+    e = e + coeffs[4] * V("b") * V("s")
+    e = e + coeffs[5] * V("s") * V("s")
+    return e
+
+
+def _poly_shuffled(coeffs, order):
+    """The same polynomial assembled in a different association order."""
+    names = ["b", "s", "k"]
+    terms = [SymbolicExpr.constant(coeffs[0])]
+    terms += [c * V(n) for n, c in zip(names, coeffs[1:4])]
+    terms += [coeffs[4] * V("b") * V("s"), coeffs[5] * V("s") * V("s")]
+    acc = SymbolicExpr.constant(0)
+    for i in sorted(range(len(terms)),
+                    key=lambda i: order[i % len(order)] if order else i):
+        acc = acc + terms[i]
+    return acc
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(-6, 6), min_size=6, max_size=6),
+       st.lists(st.integers(0, 50), min_size=0, max_size=6))
+def test_interned_equal_iff_same_canonical_form(coeffs, order):
+    a = _poly(coeffs)
+    b = _poly_shuffled(coeffs, order)
+    # same canonical polynomial -> interned to the same object
+    assert a == b
+    assert hash(a) == hash(b)
+    assert a is b, "equal canonical forms must intern to one object"
+    assert a.uid == b.uid
+    # different canonical polynomial -> not equal
+    bumped = list(coeffs)
+    bumped[len(order) % 6] += 1
+    c = _poly(bumped)
+    assert a != c and c != a
+    assert a is not c and a.uid != c.uid
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(-4, 4), min_size=6, max_size=6),
+       st.integers(-8, 8))
+def test_algebra_fast_paths_stay_canonical(coeffs, k):
+    e = _poly(coeffs)
+    assert (e + 0) is e
+    assert (e * 1) is e
+    assert (e * 0) == 0
+    assert (e - e) == 0
+    assert e + k == k + e
+    assert e * k == k * e
+    # scaling then evaluating == evaluating then scaling
+    env = {"b": 3, "s": 5, "k": 7}
+    assert (e * k).evaluate(env) == e.evaluate(env) * k
+
+
+def test_interning_survives_opatoms():
+    b, s = V("b"), V("s")
+    f1 = (b * s + 3).floordiv(s)
+    f2 = (3 + s * b).floordiv(s)
+    assert f1 is f2
+    assert SymbolicExpr.max_of(f1, f2) is f1
+
+
+# -- memoized comparisons vs fresh graphs -------------------------------------
+
+
+_DIMS = ["b", "s", "k"]
+_EXPR_POOL = [
+    V("b") * V("s"), V("b") * V("s") * 64, V("s") * V("s"),
+    V("b") * 4096, V("s") + 12, SymbolicExpr.constant(2048),
+    V("k") * V("s"), V("b") * V("s") - V("k"), 12 * V("k"),
+    V("s") * V("s") * V("b"),
+]
+
+
+def _fresh_graph(ranges, with_equality):
+    g = ShapeGraph()
+    if with_equality:
+        g.add_equality("k", 12 * V("b"))
+    for name, (lo, hi) in ranges.items():
+        g.declare_range(name, lo, hi)
+    return g
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9)),
+                min_size=4, max_size=10),
+       st.lists(st.tuples(st.integers(0, 2), st.integers(1, 64),
+                          st.integers(1, 64)),
+                min_size=0, max_size=3),
+       st.booleans())
+def test_specialized_memo_matches_fresh_unmemoized_graph(
+        pairs, narrowings, with_equality):
+    base_ranges = {"b": (1, 64), "s": (16, 4096), "k": (1, 4096)}
+    parent = _fresh_graph(base_ranges, with_equality)
+    # warm the parent memo with every query (and some repeats)
+    for i, j in pairs:
+        parent.compare(_EXPR_POOL[i], _EXPR_POOL[j])
+
+    # a chain of randomized narrowings, inheriting memo entries each time
+    ranges = dict(base_ranges)
+    graph = parent
+    for dim_i, a, b in narrowings:
+        name = _DIMS[dim_i]
+        lo0, hi0 = ranges[name]
+        lo, hi = sorted((min(a, b), max(a, b)))
+        lo = max(lo0, lo0 + lo - 1)
+        hi = min(hi0, lo + hi)
+        if lo > hi:
+            lo = hi
+        ranges[name] = (lo, hi)
+        graph = graph.specialized({name: (lo, hi)})
+
+    fresh = _fresh_graph(ranges, with_equality)
+    for i, j in pairs:
+        memoized = graph.compare(_EXPR_POOL[i], _EXPR_POOL[j])
+        expected = fresh.compare(_EXPR_POOL[i], _EXPR_POOL[j])
+        assert memoized is expected, (
+            f"{_EXPR_POOL[i]} vs {_EXPR_POOL[j]}: memoized {memoized} "
+            f"!= fresh {expected} under {ranges}")
+        # repeat query (now certainly a memo hit) must agree too
+        assert graph.compare(_EXPR_POOL[i], _EXPR_POOL[j]) is expected
+
+
+class TestMemoizedCompareEquivalence:
+    def test_declare_range_invalidates_only_dependents(self):
+        g = ShapeGraph()
+        g.declare_range("b", 1, 64)
+        g.declare_range("s", 16, 4096)
+        assert g.compare(V("b"), 100) is Cmp.LT
+        assert g.compare(V("s"), 8) is Cmp.GT
+        miss0 = g.cmp_stats["cache_miss"]
+        g.declare_range("s", 16, 64)          # only s entries go stale
+        assert g.compare(V("b"), 100) is Cmp.LT     # still a hit
+        assert g.cmp_stats["cache_miss"] == miss0
+        assert g.compare(V("s"), 8) is Cmp.GT       # recomputed
+        assert g.cmp_stats["cache_miss"] == miss0 + 1
+
+    def test_add_equality_invalidates_canonical_forms(self):
+        g = ShapeGraph()
+        g.declare_range("b", 1, 64)
+        assert g.compare(V("k"), V("b") * 12) is Cmp.UNKNOWN
+        g.add_equality("k", 12 * V("b"))
+        assert g.compare(V("k"), V("b") * 12) is Cmp.EQ
+
+    def test_interval_memo_matches_fresh(self):
+        g = ShapeGraph()
+        g.declare_range("b", 2, 8)
+        e = V("b") * V("b") + 3
+        assert (g.interval_of(e).lo, g.interval_of(e).hi) == (7, 67)
+        g.declare_range("b", 2, 4)            # narrows: memo must refresh
+        assert (g.interval_of(e).lo, g.interval_of(e).hi) == (7, 19)
+
+
+# -- incremental pipeline equivalence -----------------------------------------
+
+
+B, S = symbolic_dims("b, s")
+NV, D, F = 300, 32, 64
+
+
+def _loss(params, tokens, labels):
+    emb = params["emb"][tokens]
+    h = jax.nn.gelu(emb @ params["w1"])
+    h2 = h @ params["w2"]
+    logits = h2 @ params["emb"].T
+    logp = jax.nn.log_softmax(logits)
+    oh = jax.nn.one_hot(labels, logits.shape[-1])
+    return -(oh * logp).sum() / (1.0 * tokens.shape[0] * tokens.shape[1])
+
+
+def _train_step(params, tokens, labels):
+    loss, grads = jax.value_and_grad(_loss)(params, tokens, labels)
+    return loss, jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+
+
+def _specs():
+    p = {"emb": jax.ShapeDtypeStruct((NV, D), jnp.float32),
+         "w1": jax.ShapeDtypeStruct((D, F), jnp.float32),
+         "w2": jax.ShapeDtypeStruct((F, D), jnp.float32)}
+    t = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return p, t, t
+
+
+@pytest.fixture(scope="module")
+def traced():
+    graph, _ = trace_to_graph(_train_step, *_specs())
+    return graph
+
+
+class TestIncrementalPipeline:
+    def test_incremental_equals_cold_compile(self, traced):
+        """The incremental compile's outputs must be reproducible by fresh,
+        un-memoized computation.  The remat candidates, bound data, and
+        memory plan are checked against a cold reference *on the same
+        schedule* (when reuse fires, the incremental path deliberately
+        keeps the parent's guard/exchange post-pass, so the final order
+        itself may differ from an end-to-end cold pipeline's — each is a
+        valid guarded order)."""
+        from repro.core.memplan import build_arena_plan
+        from repro.core.remat.planner import ExecutionPlan
+        from repro.core.remat.search import RecomputeSearcher
+        from repro.core.scheduling.memsim import simulate_peak_bound
+
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"b": (1, 16), "s": (8, 256)})
+        _, _, art = _compile_pipeline(traced, sg, collect=True)
+        for ranges in ({"s": (8, 32)}, {"s": (33, 64)}, {"s": (65, 256)}):
+            sub = sg.specialized(ranges)
+            inc_plan, inc_rep, _ = _compile_pipeline(traced, sub, parent=art)
+
+            def fresh_sg():
+                g = ShapeGraph()
+                declare_dim_ranges(g, {"b": (1, 16), "s": ranges["s"]})
+                return g
+
+            # remat: a fresh searcher over the same order must reproduce
+            # every candidate the (partially reused) incremental explore kept
+            cold_cands = RecomputeSearcher(traced, fresh_sg()).explore(
+                inc_plan.order)
+            assert set(cold_cands) == set(inc_plan.candidates)
+            for vid, c_cold in cold_cands.items():
+                c_inc = inc_plan.candidates[vid]
+                assert (c_cold.recompute is None) == (c_inc.recompute is None)
+                if c_cold.recompute is not None:
+                    assert c_cold.recompute.node_ids == c_inc.recompute.node_ids
+                    assert c_cold.recompute.impact == c_inc.recompute.impact
+                    assert c_cold.recompute.impact_interval == \
+                        c_inc.recompute.impact_interval
+                    assert c_cold.recompute.flops_interval == \
+                        c_inc.recompute.flops_interval
+                assert c_cold.bytes_interval == c_inc.bytes_interval
+                assert c_cold.recompute_pruned_by_bounds == \
+                    c_inc.recompute_pruned_by_bounds
+            cold_ref = ExecutionPlan(graph=traced, order=list(inc_plan.order),
+                                     shape_graph=fresh_sg(),
+                                     candidates=cold_cands)
+            assert inc_plan.static_methods == cold_ref.static_methods
+
+            # bounds + memory plan: fresh graph, same order
+            ap = build_arena_plan(traced, inc_plan.order, fresh_sg())
+            assert ap.arena_bound_bytes == inc_rep.arena_bound_bytes
+            lo, hi = simulate_peak_bound(traced, inc_plan.order, fresh_sg())
+            assert (lo, hi) == (inc_rep.peak_bound_lo,
+                                inc_rep.peak_bound_bytes)
+
+            # without any reuse, the end-to-end cold pipeline must agree on
+            # the final order too
+            if not (inc_rep.reused_parent_schedule
+                    or inc_rep.reused_parent_postpass):
+                cold_plan, cold_rep, _ = _compile_pipeline(traced, fresh_sg())
+                assert [n.id for n in inc_plan.order] == \
+                    [n.id for n in cold_plan.order]
+                assert inc_rep.arena_bound_bytes == cold_rep.arena_bound_bytes
+
+    def test_full_reuse_when_nothing_narrows_effectively(self, traced):
+        sg = ShapeGraph()
+        declare_dim_ranges(sg, {"b": (1, 16), "s": (8, 256)})
+        _, _, art = _compile_pipeline(traced, sg, collect=True)
+        # "narrowing" to the full declared range flips nothing: the parent
+        # schedule + remat plan must be reused wholesale
+        sub = sg.specialized({"s": (8, 256)})
+        _, rep, _ = _compile_pipeline(traced, sub, parent=art)
+        assert rep.reused_parent_schedule
+
+    def test_scheduler_incremental_impact_is_invisible(self, traced):
+        res = {}
+        for mode in (True, False):
+            sg = ShapeGraph()
+            declare_dim_ranges(sg, {"b": (1, 16), "s": (8, 256)})
+            res[mode] = OpScheduler(traced, sg,
+                                    incremental_impact=mode).schedule()
+        assert [n.id for n in res[True].order] == \
+            [n.id for n in res[False].order]
+        assert res[True].symbolic_decisions == res[False].symbolic_decisions
+        assert res[True].tiebreak_decisions == res[False].tiebreak_decisions
+
+
+# -- background specialization ------------------------------------------------
+
+
+def _concrete_params(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"emb": jnp.asarray(rng.randn(NV, D), jnp.float32),
+            "w1": jnp.asarray(rng.randn(D, F) * 0.05, jnp.float32),
+            "w2": jnp.asarray(rng.randn(F, D) * 0.05, jnp.float32)}
+
+
+def _tokens(b, s, seed=1):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, NV, (b, s)), jnp.int32)
+
+
+class TestBackgroundSpecialization:
+    def _pair(self):
+        kw = dict(dynamic_dims={"b": (1, 16), "s": (8, 256)},
+                  buckets={"s": [32, 64]})
+        fn_sync = optimize(_train_step, *_specs(), **kw)
+        fn_bg = optimize(_train_step, *_specs(),
+                         background_specialize=True, **kw)
+        return fn_sync, fn_bg
+
+    def test_bitwise_identical_and_same_specialize_endpoint(self):
+        fn_sync, fn_bg = self._pair()
+        cp = _concrete_params()
+        envs = [(2, 16), (2, 48), (1, 200), (2, 48), (4, 30)]
+        for b, s in envs:
+            tok = _tokens(b, s)
+            loss_s, grads_s = fn_sync(cp, tok, tok)
+            loss_b, grads_b = fn_bg(cp, tok, tok)
+            assert np.asarray(loss_s).tobytes() == np.asarray(loss_b).tobytes()
+            for a, bb in zip(jax.tree.leaves(grads_s),
+                             jax.tree.leaves(grads_b)):
+                assert np.asarray(a).tobytes() == np.asarray(bb).tobytes()
+            assert fn_bg.last_bucket == fn_sync.last_bucket
+        # deterministic join: after the drain, the background table has
+        # specialized exactly the buckets the synchronous one compiled
+        fn_bg.drain_specializations()
+        ts, tb = fn_sync.specialization_table, fn_bg.specialization_table
+        assert tb.specialize_count == ts.specialize_count
+        assert sorted(tb.compiled_keys) == sorted(ts.compiled_keys)
+        assert tb.n_pending == 0
+
+    def test_miss_serves_fallback_then_swaps_in_plan(self):
+        _, fn_bg = self._pair()
+        cp = _concrete_params()
+        tok = _tokens(2, 16)
+        fn_bg(cp, tok, tok)                      # miss: fallback serve
+        table = fn_bg.specialization_table
+        assert table.fallback_serves == 1
+        assert table.specialize_count in (0, 1)  # compile may still be going
+        drained = fn_bg.drain_specializations()
+        assert table.specialize_count == 1
+        assert drained == [(0, 0)] or drained == []   # may land before drain
+        assert table.peek((0, 0)) is not None
+        fn_bg(cp, tok, tok)                      # now a hit
+        assert table.hits == 1
+        assert table.fallback_serves == 1
+
+    def test_warmup_is_synchronous_join(self):
+        _, fn_bg = self._pair()
+        keys = fn_bg.warmup([{"b": 2, "s": 16}, {"b": 2, "s": 100}])
+        table = fn_bg.specialization_table
+        assert keys == [(0, 0), (0, 2)]
+        assert table.specialize_count == 2
+        assert table.n_pending == 0
+        cp = _concrete_params()
+        tok = _tokens(2, 16)
+        fn_bg(cp, tok, tok)
+        assert table.hits == 1 and table.fallback_serves == 0
+
+    def test_background_arena_bound_answers_without_stall(self):
+        _, fn_bg = self._pair()
+        table = fn_bg.specialization_table
+        mono_bound = fn_bg.report.arena_bound_bytes
+        # unknown bucket: answers the conservative whole-range bound now...
+        assert table.arena_bound_bytes((0, 0)) == mono_bound
+        fn_bg.drain_specializations()
+        # ...and the exact (tighter or equal) bucket bound once compiled
+        exact = table.arena_bound_bytes((0, 0))
+        assert exact is not None and exact <= mono_bound
+        assert table.specialize_count == 1
+
+    def test_background_requires_buckets(self):
+        with pytest.raises(ValueError, match="buckets"):
+            optimize(_train_step, *_specs(),
+                     dynamic_dims={"b": (1, 16), "s": (8, 256)},
+                     background_specialize=True)

@@ -151,10 +151,15 @@ class TestSpecializationGain:
         small_bounds = []
         for key in table.space.keys():
             bp = table.get(key)
-            # tighter bounds can only resolve more comparisons
-            assert bp.report.cmp_symbolic_fraction >= \
-                mono.cmp_symbolic_fraction
-            # and the bucket's guaranteed arena never exceeds whole-range
+            # incremental specialization ran: verdicts were inherited from
+            # the whole-range compile and the memo answered repeat queries
+            # (per-query layer attribution is identical to a fresh compile —
+            # see test_compile_cache — but the *set* of queries shrinks, so
+            # the old mono-vs-bucket fraction comparison no longer applies)
+            st = bp.report.cmp_stats
+            assert st.get("inherited", 0) > 0
+            assert st.get("cache_hit", 0) > 0
+            # the bucket's guaranteed arena never exceeds whole-range
             assert bp.arena_bound_bytes <= mono.arena_bound_bytes
             small_bounds.append(bp.arena_bound_bytes)
         # the small-shape bucket is *strictly* cheaper — the whole point

@@ -147,7 +147,17 @@ class TestShapeGraph:
         g.compare(SymbolicExpr.constant(1), 2)      # constant layer
         g.compare(V("a"), 100)                      # interval layer
         g.compare(V("a"), V("zzz"))                 # unresolved
-        assert g.cmp_stats == {"const": 1, "interval": 1, "unknown": 1}
+        for k, v in {"const": 1, "interval": 1, "unknown": 1,
+                     "cache_hit": 0, "cache_miss": 3}.items():
+            assert g.cmp_stats[k] == v, k
+        # repeating a query hits the memo but still counts its layer
+        g.compare(V("a"), 100)
+        assert g.cmp_stats["cache_hit"] == 1
+        assert g.cmp_stats["interval"] == 2
+        # narrowing the consulted dim invalidates exactly that entry
+        g.declare_range("a", hi=2)
+        g.compare(V("a"), 100)
+        assert g.cmp_stats["cache_miss"] == 4
 
 
 class TestFromJax:

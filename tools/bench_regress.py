@@ -1,0 +1,141 @@
+"""Benchmark regression guard (CI): fresh runs vs the committed JSONs.
+
+Compares the *dimensionless* key metrics of a fresh benchmark run against
+the committed ``BENCH_exec.json`` / ``BENCH_compile.json`` and fails when
+any metric regresses by more than ``--threshold`` (default 25%).  Only
+ratio metrics are compared — per-call speedups, overhead ratios,
+miss/hit ratios — never absolute wall times, so the guard is meaningful
+across machines of different speeds.
+
+Rows are matched by their ``arch`` field; archs present on only one side
+(e.g. a ``--smoke`` fresh run covering 2 of 4 archs) are skipped.  Rows
+the benchmark marked ``"smoke": true`` carry single-sample medians, so
+their comparisons use twice the threshold.
+
+    PYTHONPATH=src python -m benchmarks.exec_bench --smoke --json /tmp/exec.json
+    python tools/bench_regress.py --check exec=/tmp/exec.json
+
+    PYTHONPATH=src python -m benchmarks.compile_bench --smoke --json /tmp/compile.json
+    python tools/bench_regress.py --check compile=/tmp/compile.json
+
+Exit status is non-zero on any regression; all regressions are listed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+
+# kind -> (committed file, [(dotted metric path, higher_is_better)])
+KINDS: Dict[str, Tuple[str, List[Tuple[str, bool]]]] = {
+    "exec": ("BENCH_exec.json", [
+        # call_speedup only: the per-op overhead_ratio divides by a VM
+        # overhead that is within timing noise of zero on fast machines,
+        # so it swings orders of magnitude between runs
+        ("call_speedup", True),          # VM per-call speedup vs reference
+    ]),
+    "compile": ("BENCH_compile.json", [
+        ("mean_speedup", True),          # incremental vs cold pipeline
+        ("scheduler.speedup", True),     # impact cache vs legacy hot loop
+        ("miss_path.miss_over_hit", False),   # background serve penalty
+    ]),
+}
+
+
+def _get(row: dict, path: str) -> Optional[float]:
+    cur = row
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return float(cur) if isinstance(cur, (int, float)) else None
+
+
+def _rows_by_arch(path: Path) -> Dict[str, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["arch"]: r for r in data.get("rows", []) if "arch" in r}
+
+
+def check(kind: str, fresh_path: Path, committed_path: Optional[Path],
+          threshold: float) -> List[str]:
+    committed_file, metrics = KINDS[kind]
+    committed_path = committed_path or REPO / committed_file
+    if not committed_path.exists():
+        return [f"{kind}: committed baseline {committed_path} is missing"]
+    fresh = _rows_by_arch(fresh_path)
+    committed = _rows_by_arch(committed_path)
+    shared = sorted(set(fresh) & set(committed))
+    if not shared:
+        return [f"{kind}: no shared archs between {fresh_path} and "
+                f"{committed_path}"]
+    failures = []
+    compared = 0
+    for arch in shared:
+        f_row, c_row = fresh[arch], committed[arch]
+        # single-sample smoke medians are noisy: double the allowance
+        tol = threshold * (2 if f_row.get("smoke") else 1)
+        for path, higher_better in metrics:
+            fv, cv = _get(f_row, path), _get(c_row, path)
+            if fv is None or cv is None or cv == 0:
+                continue
+            rel = (cv - fv) / cv if higher_better else (fv - cv) / cv
+            compared += 1
+            status = "FAIL" if rel > tol else "ok"
+            print(f"[{status}] {kind}/{arch} {path}: fresh {fv:.3f} vs "
+                  f"committed {cv:.3f} ({'-' if rel > 0 else '+'}"
+                  f"{abs(rel) * 100:.1f}% {'regression' if rel > 0 else 'headroom'},"
+                  f" tol {tol * 100:.0f}%)")
+            if rel > tol:
+                failures.append(
+                    f"{kind}/{arch} {path}: {fv:.3f} vs committed {cv:.3f} "
+                    f"({rel * 100:.1f}% > {tol * 100:.0f}%)")
+    if not compared:
+        # schema drift (or a baseline for the wrong kind) must not read as
+        # a clean pass
+        failures.append(
+            f"{kind}: no metrics compared between {fresh_path} and "
+            f"{committed_path} — schema mismatch?")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="append", required=True,
+                    metavar="KIND=FRESH.json",
+                    help=f"kind ({'/'.join(KINDS)}) = path to a fresh run")
+    ap.add_argument("--committed", default=None,
+                    help="override the committed baseline path "
+                         "(default: the repo's BENCH_<kind>.json)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated relative regression (default 0.25)")
+    args = ap.parse_args()
+    if args.committed and len(args.check) > 1:
+        ap.error("--committed overrides one baseline; use it with a "
+                 "single --check")
+
+    failures: List[str] = []
+    for spec in args.check:
+        if "=" not in spec:
+            ap.error(f"--check expects KIND=FRESH.json, got {spec!r}")
+        kind, _, fresh = spec.partition("=")
+        if kind not in KINDS:
+            ap.error(f"unknown kind {kind!r} (known: {', '.join(KINDS)})")
+        failures += check(kind, Path(fresh),
+                          Path(args.committed) if args.committed else None,
+                          args.threshold)
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nno benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
