@@ -1,0 +1,213 @@
+"""Rolled-loop benchmark: plan size, compile time and per-step execution
+cost of symbolic control flow vs the mechanically unrolled DAG.
+
+For each benchmark arch a small autoregressive decode cell (the arch's
+smoke ``d_model`` and input mode, mirroring ``tests/test_loops.py``) is
+compiled two ways: **rolled** — one ``jax.lax.scan`` with a symbolic
+trip count ``t``, one ``Loop`` instruction — and **unrolled** — a Python
+loop at static trip count T, an O(T·body) instruction stream.
+
+Asserted invariants (the symbolic-control-flow contract):
+
+  * plan size is independent of the trip count: the rolled program's
+    instruction counts are identical under a 64x wider declared trip
+    range, and strictly smaller than the unrolled program at T=17;
+  * compile time is independent of the trip count: compiling the rolled
+    loop under the wide range costs no more than 2.5x the narrow range
+    (noise bound), while the unrolled compile grows with T;
+  * rolled per-step execution cost <= unrolled per-step cost (25%
+    noise bound) at T=17.
+
+    PYTHONPATH=src python -m benchmarks.loop_bench [--smoke] [--json F]
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import optimize, symbolic_dim
+
+ARCHS = ["llama2_1b", "gemma_2b", "granite_8b", "musicgen_medium"]
+SMOKE_ARCHS = ["llama2_1b", "musicgen_medium"]   # both input modes
+
+B = 2
+V = 32
+T_EXEC = 17
+NARROW = (1, 64)
+WIDE = (1, 4096)
+N_CALLS = 12
+
+
+def _cell(arch):
+    """Decode cell for one arch: (step, param_specs, xs_spec_fn)."""
+    cfg = get_smoke_config(arch)
+    d = cfg.d_model
+    tokens = cfg.input_mode == "tokens"
+
+    def step(params, c, x):
+        e = params["emb"][x] if tokens else x @ params["wx"]
+        h = jnp.tanh(c @ params["wh"] + e)
+        return h, jnp.sum(h, axis=-1)
+
+    p = {"wh": jax.ShapeDtypeStruct((d, d), jnp.float32),
+         "h0": jax.ShapeDtypeStruct((B, d), jnp.float32)}
+    if tokens:
+        p["emb"] = jax.ShapeDtypeStruct((V, d), jnp.float32)
+        xs_spec = lambda t: jax.ShapeDtypeStruct((t, B), jnp.int32)
+    else:
+        p["wx"] = jax.ShapeDtypeStruct((d, d), jnp.float32)
+        xs_spec = lambda t: jax.ShapeDtypeStruct((t, B, d), jnp.float32)
+    return step, p, xs_spec
+
+
+def _rolled_fn(arch):
+    step, _, _ = _cell(arch)
+
+    def f(params, xs):
+        c0 = jnp.tanh(params["h0"])
+        cN, ys = jax.lax.scan(lambda c, x: step(params, c, x), c0, xs)
+        return cN, ys
+    return f
+
+
+def _unrolled_fn(arch, T):
+    step, _, _ = _cell(arch)
+
+    def f(params, xs):
+        c = jnp.tanh(params["h0"])
+        ys = []
+        for i in range(T):
+            c, y = step(params, c, xs[i])
+            ys.append(y)
+        return c, jnp.stack(ys)
+    return f
+
+
+def _concrete(arch, T, seed=0):
+    _, p_specs, xs_spec = _cell(arch)
+    rng = np.random.RandomState(seed)
+    params = {k: jnp.asarray(rng.randn(*s.shape) * 0.2, s.dtype)
+              for k, s in p_specs.items()}
+    xs = xs_spec(T)
+    if np.issubdtype(xs.dtype, np.integer):
+        xv = jnp.asarray(rng.randint(0, V, xs.shape), xs.dtype)
+    else:
+        xv = jnp.asarray(rng.randn(*xs.shape) * 0.2, xs.dtype)
+    return params, xv
+
+
+def _best_wall_us(fn, n: int = N_CALLS) -> float:
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _compile_us(build) -> float:
+    t0 = time.perf_counter()
+    fn = build()
+    return fn, (time.perf_counter() - t0) * 1e6
+
+
+def _bench_arch(arch: str) -> Dict:
+    t = symbolic_dim("t")
+    _, p_specs, xs_spec = _cell(arch)
+
+    rolled, narrow_us = _compile_us(lambda: optimize(
+        _rolled_fn(arch), p_specs, xs_spec(t), dynamic_dims={"t": NARROW}))
+    t2 = symbolic_dim("t")
+    wide, wide_us = _compile_us(lambda: optimize(
+        _rolled_fn(arch), p_specs, xs_spec(t2), dynamic_dims={"t": WIDE}))
+    unrolled, unrolled_us = _compile_us(lambda: optimize(
+        _unrolled_fn(arch, T_EXEC), p_specs, xs_spec(T_EXEC)))
+
+    counts = rolled.program.counts()
+    assert counts["Loop"] == 1
+    assert wide.program.counts() == counts, (
+        f"{arch}: rolled plan size depends on the declared trip range")
+    n_rolled = rolled.program.n_instructions
+    n_unrolled = unrolled.program.n_instructions
+    assert n_rolled < n_unrolled, (
+        f"{arch}: rolled program ({n_rolled}) not smaller than unrolled "
+        f"({n_unrolled}) at T={T_EXEC}")
+    assert wide_us <= narrow_us * 2.5 + 50_000, (
+        f"{arch}: rolled compile time grew with the trip range "
+        f"({narrow_us:.0f}us -> {wide_us:.0f}us)")
+
+    params, xs = _concrete(arch, T_EXEC)
+    rolled(params, xs)                    # warm: resolve + caches
+    unrolled(params, xs)
+    rolled_us = _best_wall_us(lambda: rolled(params, xs))
+    unrolled_wall_us = _best_wall_us(lambda: unrolled(params, xs))
+    assert rolled_us <= unrolled_wall_us * 1.25, (
+        f"{arch}: rolled per-step cost {rolled_us / T_EXEC:.1f}us clearly "
+        f"above unrolled {unrolled_wall_us / T_EXEC:.1f}us")
+
+    return dict(
+        arch=arch,
+        n_instructions_rolled=n_rolled,
+        n_instructions_unrolled=n_unrolled,
+        compile_rolled_us=round(narrow_us, 1),
+        compile_rolled_wide_us=round(wide_us, 1),
+        compile_unrolled_us=round(unrolled_us, 1),
+        exec_rolled_us=round(rolled_us, 1),
+        exec_unrolled_us=round(unrolled_wall_us, 1),
+        per_step_rolled_us=round(rolled_us / T_EXEC, 2),
+        per_step_unrolled_us=round(unrolled_wall_us / T_EXEC, 2),
+        # dimensionless metrics for tools/bench_regress.py
+        compile_speedup_vs_unrolled=round(unrolled_us / narrow_us, 3),
+        exec_speedup_vs_unrolled=round(unrolled_wall_us / rolled_us, 3),
+        plan_size_ratio=round(n_unrolled / n_rolled, 3),
+    )
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    rows = []
+    for arch in (SMOKE_ARCHS if smoke else ARCHS):
+        row = _bench_arch(arch)
+        row["smoke"] = smoke   # bench_regress doubles tolerance for smoke
+        rows.append(row)
+    return rows
+
+
+def format_rows(rows: List[Dict]) -> str:
+    out = []
+    for r in rows:
+        out.append(
+            f"{r['arch']:18s} program {r['n_instructions_rolled']:3d} vs "
+            f"{r['n_instructions_unrolled']:3d} instrs "
+            f"({r['plan_size_ratio']:.1f}x)  "
+            f"compile {r['compile_rolled_us']:8.0f}us vs "
+            f"{r['compile_unrolled_us']:8.0f}us "
+            f"({r['compile_speedup_vs_unrolled']:.1f}x)  "
+            f"step {r['per_step_rolled_us']:6.1f}us vs "
+            f"{r['per_step_unrolled_us']:6.1f}us")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="two archs (CI)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write rows as JSON")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print(format_rows(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,8 +30,8 @@ def main() -> None:
     steps = 6 if args.fast else 12
 
     from benchmarks import (compile_bench, dispatch_bench, exec_bench,
-                            memplan_bench, remat_sweep, roofline,
-                            scheduler_micro, symbolic_coverage,
+                            loop_bench, memplan_bench, remat_sweep,
+                            roofline, scheduler_micro, symbolic_coverage,
                             table1_dynamic_training)
 
     # paper Table 1: dynamic vs static vs BladeDISC++ training
@@ -110,6 +110,19 @@ def main() -> None:
     with open("BENCH_compile.json", "w") as f:
         json.dump({"rows": rows}, f, indent=2)
     print(compile_bench.format_rows(rows), file=sys.stderr)
+
+    # symbolic control flow: rolled scan vs mechanically unrolled DAG
+    # (plan size / compile time trip-count independence + per-step cost
+    # <= unrolled asserted inside)
+    rows = _timed(
+        "loop", lambda: loop_bench.run(smoke=args.fast),
+        lambda rs: ";".join(
+            f"{r['arch']}:{r['plan_size_ratio']:.0f}x"
+            f"@{r['compile_speedup_vs_unrolled']:.1f}x"
+            for r in rs))
+    with open("BENCH_loop.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(loop_bench.format_rows(rows), file=sys.stderr)
 
     # roofline readout from the dry-run artifacts (if present)
     try:

@@ -7,10 +7,10 @@ the runtime (``repro.core.executor``), wired together by :func:`optimize`.
 """
 from .api import (BucketPlan, BucketSpace, DynamicShapeFunction,
                   OptimizeReport, Program, ProgramVM, SpecializationTable,
-                  build_bucket_space, lower_plan, optimize, symbolic_dim,
-                  symbolic_dims)
+                  build_bucket_space, lower_plan, optimize, scan,
+                  symbolic_dim, symbolic_dims)
 
-__all__ = ["DynamicShapeFunction", "OptimizeReport", "optimize",
+__all__ = ["DynamicShapeFunction", "OptimizeReport", "optimize", "scan",
            "symbolic_dim", "symbolic_dims",
            "BucketSpace", "SpecializationTable", "BucketPlan",
            "build_bucket_space",

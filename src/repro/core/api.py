@@ -43,7 +43,7 @@ __all__ = [
     "optimize", "DynamicShapeFunction", "OptimizeReport",
     "symbolic_dim", "symbolic_dims",
     "BucketSpace", "SpecializationTable", "BucketPlan", "build_bucket_space",
-    "Program", "ProgramVM", "lower_plan",
+    "Program", "ProgramVM", "lower_plan", "scan",
 ]
 
 _EXECUTORS = ("vm", "reference")
@@ -88,6 +88,22 @@ def symbolic_dim(name: str):
 
 def symbolic_dims(spec: str):
     return export.symbolic_shape(spec)
+
+
+def scan(body, init, xs=None, length=None):
+    """``jax.lax.scan`` with rolled-loop compilation under ``optimize``.
+
+    Inside a function passed to :func:`optimize`, a scan whose trip count
+    is a *symbolic* dimension is traced once as a sub-graph and compiled
+    to a single ``Loop`` node: the lowered ``Program`` stays O(body size)
+    and the planned arena bound is independent of the trip count (carried
+    values ping-pong between two slot generations across the back-edge;
+    per-iteration temporaries die and their slots are reused every
+    iteration).  Static-length scans — and bodies the roll gate cannot
+    prove safe — fall back to ordinary unrolled tracing with identical
+    results.  Outside ``optimize`` this is exactly ``jax.lax.scan``.
+    """
+    return jax.lax.scan(body, init, xs=xs, length=length)
 
 
 @dataclass

@@ -140,8 +140,31 @@ class BucketSpace:
         return f"BucketSpace({body}; {self.n_buckets} buckets)"
 
 
+def _nearest_nth_root(p: int, n: int) -> int:
+    """Nearest integer to the real ``n``-th root of ``p``, exactly.
+
+    Pure integer arithmetic: the float seed is only a starting guess and
+    is corrected by exact comparisons, so every process computes the same
+    value regardless of libm/FPU differences.
+    """
+    r = max(int(round(p ** (1.0 / n))), 0)
+    while r > 0 and r ** n > p:
+        r -= 1
+    while (r + 1) ** n <= p:
+        r += 1
+    # round toward the real root: root >= r + 1/2  iff  2^n * p >= (2r+1)^n
+    return r + 1 if (2 ** n) * p >= (2 * r + 1) ** n else r
+
+
 def _geometric_uppers(lo: int, hi: int, n: int) -> Tuple[int, ...]:
     """``n`` edges spaced by a constant ratio from ``lo`` to ``hi``.
+
+    Each interior edge is the nearest integer to ``(lo^(n-k) * hi^k)^(1/n)``
+    computed in exact integer arithmetic — identical on every host, so SPMD
+    programs that each build their own :class:`SpecializationTable` from the
+    same spec are guaranteed to dispatch any in-range env to the same bucket
+    (a float-pow formulation can round an edge differently across machines
+    and silently split replicas across buckets).
 
     Degenerate ranges / counts collapse buckets rather than erroring:
     edges that round onto a previous edge are dropped.
@@ -152,7 +175,7 @@ def _geometric_uppers(lo: int, hi: int, n: int) -> Tuple[int, ...]:
     uppers: List[int] = []
     prev = lo - 1
     for k in range(1, n):
-        u = int(round(lo * (hi / lo) ** (k / n)))
+        u = _nearest_nth_root(lo ** (n - k) * hi ** k, n)
         if u <= prev or u >= hi:
             continue
         uppers.append(u)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..ir.graph import Graph, Node, Value
+from ..ir.loop import loop_body_of
 from ..ir.trace import refine_params, solve_checked_env
 from ..memplan.arena import ArenaAllocator
 from ..remat.planner import ExecutionPlan
@@ -255,15 +256,60 @@ class PlanInterpreter:
             pinned_holder["s"] = frozenset(
                 [iv.id for iv in node.invals] + [ov.id for ov in node.outvals])
             ins = [materialize(iv) for iv in node.invals]
-            out_bytes = sum(bytes_of(ov) for ov in node.outvals
-                            if ov.consumers or ov.id in self._output_ids)
-            mm.ensure(out_bytes)  # Remat::EvictOp check
-            outs = _bind_node(node, ins, params_of(node))
-            del ins
-            for ov, oa in zip(node.outvals, outs):
-                if ov.consumers or ov.id in self._output_ids:
-                    storage[ov.id] = oa
-                    mm.alloc(ov.id, bytes_of(ov))
+            body = loop_body_of(node)
+            if body is not None:
+                # rolled loop: one ensure for the loop's whole internal peak
+                # (Remat::EvictOp hoisted out of the body), then the shared
+                # account() event replay drives the MemoryManager — the same
+                # engine the VM and the resolve-time stats replay use, so
+                # every executor reports identical loop accounting
+                lp = body.plan(plan.shape_graph)
+                trip = body.length_expr.evaluate(env)
+                kept = [bool(ov.consumers) or ov.id in self._output_ids
+                        for ov in node.outvals]
+                nk = body.num_carry
+                outer_y = [(ov.id, bytes_of(ov))
+                           for ov, k in zip(node.outvals[nk:], kept[nk:]) if k]
+                outer_carry = [(ov.id, bytes_of(ov)) if k else None
+                               for ov, k in zip(node.outvals[:nk], kept[:nk])]
+                # body-side caches namespaced by the body graph's uid — body
+                # value/node ids restart at 0 and must not collide with the
+                # outer graph's entries
+                bkey = (body.graph.uid,) + tuple(sorted(env.items()))
+                bsizes = self._size_cache.setdefault(bkey, {})
+                bparams = self._params_cache.setdefault(bkey, {})
+
+                def bsize_of(bvid: int) -> int:
+                    b = bsizes.get(bvid)
+                    if b is None:
+                        b = lp.sizes[bvid].evaluate(env)
+                        bsizes[bvid] = b
+                    return b
+
+                def bparams_of(bn: Node) -> Dict[str, Any]:
+                    p = bparams.get(bn.id)
+                    if p is None:
+                        p = refine_params(bn.params, env)
+                        bparams[bn.id] = p
+                    return p
+
+                mm.ensure(lp.peak_expr_for(node, kept, trip).evaluate(env))
+                lp.account(mm, node.id, trip, bsize_of, outer_y, outer_carry)
+                outs = lp.execute(ins, trip, env, bparams_of, bind=_bind_node)
+                del ins
+                for ov, oa, k in zip(node.outvals, outs, kept):
+                    if k:   # account() already allocated the kept outputs
+                        storage[ov.id] = oa
+            else:
+                out_bytes = sum(bytes_of(ov) for ov in node.outvals
+                                if ov.consumers or ov.id in self._output_ids)
+                mm.ensure(out_bytes)  # Remat::EvictOp check
+                outs = _bind_node(node, ins, params_of(node))
+                del ins
+                for ov, oa in zip(node.outvals, outs):
+                    if ov.consumers or ov.id in self._output_ids:
+                        storage[ov.id] = oa
+                        mm.alloc(ov.id, bytes_of(ov))
             # free dead values (buffer lifetime = last consumer)
             seen = set()
             for iv in node.invals:

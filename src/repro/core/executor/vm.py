@@ -26,11 +26,12 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from ..ir.trace import solve_checked_env
 from ..lowering.program import (OP_BIND_ARG, OP_COMPUTE, OP_DONATE,
-                                OP_FREE_SLOT, OP_MAYBE_EVICT, OP_REGEN,
-                                Program, ResolvedProgram)
+                                OP_FREE_SLOT, OP_LOOP, OP_MAYBE_EVICT,
+                                OP_REGEN, Program, ResolvedProgram)
 from ..memplan.arena import ArenaAllocator
 from ..remat.runtime import RuntimeRematPolicy
 from .interpreter import RunReport
@@ -81,6 +82,69 @@ class ProgramVM:
         wall = time.perf_counter() - t0
         return outs, RunReport(stats=stats, wall_s=wall, env=env)
 
+    # ------------------------------------------------------------- loops --
+    def _exec_loop(self, info, rl, ins: Sequence[Any],
+                   env: Dict[str, int]) -> List[Any]:
+        """Run one rolled loop: the lowered body sub-Program per iteration
+        with registers rebound (carries from the previous iteration's
+        output registers, ``xs`` slices by index).
+
+        Pure execution — memory accounting happens through the shared
+        ``LoopPlanInfo.account`` engine (dynamic path) or the resolve-time
+        stats replay (fast path).  The body runs the same nodes in the
+        same order with the same refined params as the reference
+        interpreter's op-by-op loop, so outputs are bitwise-identical."""
+        body, lp = info.body, info.lp
+        bprog = info.body_program
+        params = rl.rbody.params
+        nc, nk = body.num_consts, body.num_carry
+        consts_args = list(ins[:nc])
+        carries = list(ins[nc:nc + nk])
+        # one unstack dispatch per used xs, not one slice per iteration
+        xs = [list(x) if lp.x_used[j] else None
+              for j, x in enumerate(ins[nc + nk:])]
+        out_regs = bprog.out_regs          # carries then ys
+        ys: List[List[Any]] = [[] for _ in lp.y_out]
+        for i in range(rl.trip):
+            flat = consts_args + carries + [
+                xs[j][i] if lp.x_used[j] else None for j in range(len(xs))]
+            storage: List[Any] = [None] * bprog.n_regs
+            for inst in bprog.fast_instructions:
+                op = inst.op
+                if op == OP_COMPUTE:
+                    b_ins = [storage[r] for r in inst.in_regs]
+                    if inst.dim_as_value:
+                        out = jnp.asarray(params[inst.cidx]["dim"], jnp.int32)
+                        for _oi, r in inst.store:
+                            storage[r] = out
+                    elif inst.multi:
+                        outs = inst.prim.bind(*b_ins, **params[inst.cidx])
+                        for oi, r in inst.store:
+                            storage[r] = outs[oi]
+                    else:
+                        out = inst.prim.bind(*b_ins, **params[inst.cidx])
+                        for _oi, r in inst.store:
+                            storage[r] = out
+                elif op == OP_BIND_ARG:
+                    storage[inst.reg] = (flat[inst.index]
+                                         if inst.index >= 0 else inst.const)
+                elif op == OP_FREE_SLOT or op == OP_DONATE:
+                    storage[inst.reg] = None
+            carries = [storage[r] for r in out_regs[:nk]]
+            for j, r in enumerate(out_regs[nk:]):
+                ys[j].append(storage[r])
+        if rl.trip > 0:
+            # lax.concatenate over expanded slices: bitwise-identical to
+            # jnp.stack at a fraction of its dispatch cost
+            stacked = [
+                lax.concatenate([lax.expand_dims(y, (0,)) for y in col], 0)
+                for col in ys]
+        else:
+            stacked = [jnp.zeros((0,) + tuple(int(d.evaluate(env))
+                                              for d in v.dims), v.dtype)
+                       for v in lp.y_out]
+        return carries + stacked
+
     # ------------------------------------------------------------ fast path
     def _run_fast(self, flat_args: Sequence[Any],
                   resolved: ResolvedProgram) -> Tuple[List[Any], MemoryStats]:
@@ -108,6 +172,12 @@ class ProgramVM:
                                      if inst.index >= 0 else inst.const)
             elif op == OP_FREE_SLOT or op == OP_DONATE:
                 storage[inst.reg] = None
+            elif op == OP_LOOP:
+                outs = self._exec_loop(
+                    prog.loops[inst.lidx], resolved.loops[inst.lidx],
+                    [storage[r] for r in inst.in_regs], resolved.env)
+                for oi, r in inst.store:
+                    storage[r] = outs[oi]
         outputs = [storage[r] for r in prog.out_regs]
         return outputs, prog.stats_for(resolved)
 
@@ -278,6 +348,25 @@ class ProgramVM:
                     arena.place_external(inst.vid, nbytes[inst.reg])
                 if prog.count_inputs:
                     mm.alloc(inst.vid, nbytes[inst.reg])
+            elif op == OP_LOOP:
+                # rolled loop under the dynamic regime: the evict check is
+                # hoisted — one ensure() for the loop's exact internal peak
+                # delta — then the shared account() engine drives the
+                # MemoryManager while execution runs the body sub-Program
+                state["step"] = inst.step
+                state["pinned"] = inst.pinned
+                ins = [storage[r] if storage[r] is not None else materialize(r)
+                       for r in inst.in_regs]
+                rl = resolved.loops[inst.lidx]
+                info = prog.loops[inst.lidx]
+                mm.ensure(rl.extra_bytes)
+                info.lp.account(mm, info.node.id, rl.trip,
+                                rl.sizes.__getitem__, rl.outer_y,
+                                rl.outer_carry)
+                outs = self._exec_loop(info, rl, ins, env)
+                del ins
+                for oi, r in inst.store:   # account() allocated the kept outs
+                    storage[r] = outs[oi]
             elif op == OP_FREE_SLOT:
                 if holds.get(inst.reg, 0) > 0:
                     pending_free[inst.reg] = True

@@ -1,10 +1,14 @@
 from .graph import Graph, Node, Value
+from .loop import (LOOP_PARAM, LoopBody, LoopPlanInfo, is_loop_node,
+                   loop_body_of, rollable_body)
 from .trace import (check_declared_ranges, graph_from_closed_jaxpr,
                     refine_params, solve_checked_env, solve_env,
                     trace_to_graph)
 
 __all__ = [
     "Graph", "Node", "Value",
+    "LOOP_PARAM", "LoopBody", "LoopPlanInfo", "is_loop_node",
+    "loop_body_of", "rollable_body",
     "check_declared_ranges", "graph_from_closed_jaxpr", "refine_params",
     "solve_checked_env", "solve_env", "trace_to_graph",
 ]

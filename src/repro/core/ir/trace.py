@@ -4,8 +4,10 @@ We trace the target function once with ``jax.make_jaxpr`` over
 ShapeDtypeStructs whose dynamic dims are ``jax.export.symbolic_shape``
 variables, then convert to our IR.  Call-like primitives (jit, remat,
 custom_jvp/vjp) are inlined so the analyses see a flat op graph, matching
-the paper's post-fusion HLO-level view.  Control-flow primitives
-(scan/while/cond) are kept opaque.
+the paper's post-fusion HLO-level view.  Control-flow primitives are kept
+opaque with one exception: a top-level ``scan`` with a *symbolic* trip
+count becomes a rolled loop node (see ``ir.loop``) — its body traced once
+as a sub-graph so the downstream plan is O(body), not O(t·body).
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ from jax._src import core as jcore
 from ..symbolic import dim_to_expr
 from ..symbolic.expr import SymbolicExpr
 from .graph import Graph, Node, Value
+from .loop import LOOP_PARAM, LoopBody, rollable_body
 
 # primitive name -> params key holding the sub-jaxpr to inline
 _INLINE_CLOSED = {"pjit": "jaxpr", "jit": "jaxpr", "closed_call": "call_jaxpr",
@@ -30,7 +33,36 @@ def _dims_of_aval(aval) -> Tuple[SymbolicExpr, ...]:
     return tuple(dim_to_expr(d) for d in aval.shape)
 
 
-def graph_from_closed_jaxpr(closed, *, name: str = "") -> Graph:
+def _try_roll_scan(eqn, *, name: str) -> "LoopBody | None":
+    """Convert a scan eqn to a :class:`LoopBody` when it is rollable.
+
+    Rolled form requires a *symbolic* trip count (a static length gains
+    nothing and some analyses — flops scaling, grad accumulation — rely
+    on the opaque primitive), forward iteration order, no manual
+    unrolling, and a body whose carry outputs satisfy
+    :func:`rollable_body`.  Nested scans stay opaque: the body is traced
+    with ``roll_loops=False``.
+    """
+    from ..symbolic import is_symbolic_dim
+
+    params = eqn.params
+    length = params.get("length")
+    if not is_symbolic_dim(length):
+        return None
+    if params.get("reverse") or params.get("unroll", 1) not in (1, False):
+        return None
+    nc, nk = params["num_consts"], params["num_carry"]
+    nx = len(eqn.invars) - nc - nk
+    bg = graph_from_closed_jaxpr(params["jaxpr"], name=f"{name}.body",
+                                 roll_loops=False)
+    if not rollable_body(bg, nc, nk):
+        return None
+    return LoopBody(graph=bg, num_consts=nc, num_carry=nk, num_xs=nx,
+                    length_expr=dim_to_expr(length))
+
+
+def graph_from_closed_jaxpr(closed, *, name: str = "",
+                            roll_loops: bool = True) -> Graph:
     g = Graph()
     env: Dict[Any, Value] = {}
 
@@ -68,6 +100,21 @@ def graph_from_closed_jaxpr(closed, *, name: str = "") -> Graph:
             if pname in _INLINE_CLOSED or pname in _INLINE_OPEN:
                 _inline(eqn, read_local, write_local)
                 continue
+            if pname == "scan" and roll_loops:
+                body = _try_roll_scan(eqn, name=name)
+                if body is not None:
+                    invals = [read_local(v) for v in eqn.invars]
+                    outvals = []
+                    for ov in eqn.outvars:
+                        aval = ov.aval
+                        val = g.new_value(_dims_of_aval(aval), aval.dtype,
+                                          aval.shape)
+                        outvals.append(val)
+                        if not isinstance(ov, jcore.DropVar):
+                            write_local(ov, val)
+                    g.add_node(eqn.primitive, invals, outvals,
+                               {LOOP_PARAM: body})
+                    continue
             invals = [read_local(v) for v in eqn.invars]
             outvals = []
             for ov in eqn.outvars:

@@ -23,11 +23,12 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..ir.graph import Value
+from ..ir.loop import loop_body_of
 from ..ir.trace import _contains_symbolic
 from ..remat.export import export_regen_programs
 from ..remat.planner import ExecutionPlan
-from .program import (BindArg, Compute, Donate, FreeSlot, MaybeEvict,
-                      Program, Regen, Return)
+from .program import (BindArg, Compute, Donate, FreeSlot, Loop, LoopInfo,
+                      MaybeEvict, Program, Regen, Return)
 
 
 def lower_plan(plan: ExecutionPlan, *,
@@ -77,32 +78,56 @@ def lower_plan(plan: ExecutionPlan, *,
     computes: List[Compute] = []
     static_params: List[Optional[Dict[str, Any]]] = []
     params_cidx_of: Dict[int, int] = {}
+    loops: List[LoopInfo] = []
     for step, node in enumerate(plan.order):
-        cidx = len(computes)
+        body = loop_body_of(node)
+        pinned = frozenset(
+            [iv.id for iv in node.invals] + [ov.id for ov in node.outvals])
         if has_evict_path:
-            pinned = frozenset(
-                [iv.id for iv in node.invals] + [ov.id for ov in node.outvals])
             cand_in = tuple(dict.fromkeys(
                 reg_of[iv.id] for iv in node.invals
                 if iv.id in plan.candidates))
             if cand_in:
                 instructions.append(Regen(regs=cand_in, step=step,
                                           pinned=pinned))
-            instructions.append(MaybeEvict(cidx=cidx, step=step,
-                                           pinned=pinned))
+            if body is None:
+                # a rolled loop does its own hoisted ensure (the resolved
+                # internal peak delta) inside the Loop handler; plain
+                # computes get the MaybeEvict guard here
+                instructions.append(MaybeEvict(cidx=len(computes), step=step,
+                                               pinned=pinned))
         store = tuple((oi, new_reg(ov)) for oi, ov in enumerate(node.outvals)
                       if ov.consumers or ov.id in output_ids)
-        comp = Compute(cidx=cidx, node=node, prim=node.prim,
-                       multi=bool(node.prim is not None
-                                  and node.prim.multiple_results),
-                       dim_as_value=node.prim_name == "dim_as_value",
-                       in_regs=tuple(reg_of[iv.id] for iv in node.invals),
-                       store=store, step=step)
-        instructions.append(comp)
-        computes.append(comp)
-        static_params.append(
-            None if _contains_symbolic(node.params) else node.params)
-        params_cidx_of[node.id] = cidx
+        if body is not None:
+            # rolled loop: lower the traced body ONCE as a sub-Program —
+            # the outer stream stays O(body) regardless of the trip count
+            lp = body.plan(plan.shape_graph)
+            body_plan = ExecutionPlan(graph=body.graph, order=list(lp.order),
+                                      shape_graph=plan.shape_graph,
+                                      candidates={})
+            body_program = lower_plan(body_plan, memory_limit=None,
+                                      donate_inputs=False, count_inputs=True)
+            kept = tuple(bool(ov.consumers) or ov.id in output_ids
+                         for ov in node.outvals)
+            instructions.append(Loop(
+                lidx=len(loops),
+                in_regs=tuple(reg_of[iv.id] for iv in node.invals),
+                store=store, step=step, pinned=pinned))
+            loops.append(LoopInfo(node=node, body=body, lp=lp,
+                                  body_program=body_program, kept=kept))
+        else:
+            cidx = len(computes)
+            comp = Compute(cidx=cidx, node=node, prim=node.prim,
+                           multi=bool(node.prim is not None
+                                      and node.prim.multiple_results),
+                           dim_as_value=node.prim_name == "dim_as_value",
+                           in_regs=tuple(reg_of[iv.id] for iv in node.invals),
+                           store=store, step=step)
+            instructions.append(comp)
+            computes.append(comp)
+            static_params.append(
+                None if _contains_symbolic(node.params) else node.params)
+            params_cidx_of[node.id] = cidx
 
         # frees, in the interpreter's first-occurrence order
         seen = set()
@@ -151,4 +176,4 @@ def lower_plan(plan: ExecutionPlan, *,
                    candidate_regs=candidate_regs,
                    has_evict_path=has_evict_path,
                    memory_limit=memory_limit, donate_inputs=donate_inputs,
-                   count_inputs=count_inputs)
+                   count_inputs=count_inputs, loops=loops)

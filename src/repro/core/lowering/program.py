@@ -58,6 +58,7 @@ OP_REGEN = 3
 OP_FREE_SLOT = 4
 OP_DONATE = 5
 OP_RETURN = 6
+OP_LOOP = 7
 
 
 @dataclass(frozen=True)
@@ -140,6 +141,45 @@ class Return:
 
 
 @dataclass(frozen=True)
+class Loop:
+    """Run a rolled ``scan`` loop: one instruction for the whole trip.
+
+    The body is a lowered sub-:class:`Program` executed once per
+    iteration with registers rebound (carries from the previous
+    iteration's outputs, ``xs`` slices by index); ``lidx`` indexes the
+    owning Program's ``loops`` table.  ``store`` routes the loop's kept
+    outer outputs (final carries, stacked ``ys``); ``pinned`` mirrors
+    ``MaybeEvict.pinned`` for the hoisted evict check."""
+    lidx: int
+    in_regs: Tuple[int, ...]
+    store: Tuple[Tuple[int, int], ...]
+    step: int
+    pinned: frozenset
+    op: int = OP_LOOP
+
+
+@dataclass
+class LoopInfo:
+    """Compile-time half of one rolled loop inside a Program."""
+    node: Node                 # the outer loop node
+    body: Any                  # ir.loop.LoopBody
+    lp: Any                    # ir.loop.LoopPlanInfo (schedule + events)
+    body_program: "Program"    # the body lowered once (O(body) size)
+    kept: Tuple[bool, ...]     # per outer output: consumed or returned
+
+
+@dataclass
+class ResolvedLoop:
+    """One rolled loop realized for a concrete env."""
+    trip: int                               # trip count t at this env
+    rbody: ResolvedProgram                  # body program resolve (cached)
+    extra_bytes: int                        # exact internal peak delta
+    sizes: Dict[int, int]                   # body value id -> bytes
+    outer_y: List[Tuple[int, int]]          # kept stacked ys: (vid, bytes)
+    outer_carry: List[Optional[Tuple[int, int]]]   # per carry slot
+
+
+@dataclass(frozen=True)
 class RegenStep:
     """One lowered node of a regeneration sub-program.
 
@@ -190,6 +230,9 @@ class ResolvedProgram:
     # True when no MaybeEvict can fire at this env (no limit, or the
     # replayed peak fits it): the VM may run the fast stream
     fast_ok: bool = True
+    # per rolled loop (index = Loop.lidx): trip count, body resolve,
+    # exact internal peak delta, and the accounting size tables
+    loops: List[ResolvedLoop] = field(default_factory=list)
 
 
 @dataclass
@@ -216,6 +259,9 @@ class Program:
     memory_limit: Optional[int]
     donate_inputs: bool
     count_inputs: bool
+    # rolled loops (index = Loop.lidx); each body is itself a Program,
+    # lowered once — the stream stays O(body), not O(t·body)
+    loops: List[LoopInfo] = field(default_factory=list)
 
     def __post_init__(self):
         self._resolve_cache: Dict[Tuple, ResolvedProgram] = {}
@@ -229,7 +275,7 @@ class Program:
         names = {OP_BIND_ARG: "BindArg", OP_COMPUTE: "Compute",
                  OP_MAYBE_EVICT: "MaybeEvict", OP_REGEN: "Regen",
                  OP_FREE_SLOT: "FreeSlot", OP_DONATE: "Donate",
-                 OP_RETURN: "Return"}
+                 OP_RETURN: "Return", OP_LOOP: "Loop"}
         out = {name: 0 for name in names.values()}
         for inst in self.instructions:
             out[names[inst.op]] += 1
@@ -294,18 +340,43 @@ class Program:
             arena = self.plan.arena_plan.resolve(env)
             offsets = arena.offsets
 
+        # rolled loops: resolve each body sub-program (its own cache entry,
+        # keyed by the body graph's uid) and evaluate the loop's trip count,
+        # exact internal peak delta, and accounting size tables
+        rloops: List[ResolvedLoop] = []
+        for info in self.loops:
+            trip = info.body.length_expr.evaluate(env)
+            rbody = info.body_program.resolve(env, size_cache, params_cache)
+            bsizes = {bvid: e.evaluate(env)
+                      for bvid, e in info.lp.sizes.items()}
+            nk = info.body.num_carry
+            node = info.node
+            outer_y = [(ov.id, nbytes[self.reg_of[ov.id]])
+                       for ov, k in zip(node.outvals[nk:], info.kept[nk:])
+                       if k]
+            outer_carry = [(ov.id, nbytes[self.reg_of[ov.id]]) if k else None
+                           for ov, k in zip(node.outvals[:nk],
+                                            info.kept[:nk])]
+            extra = info.lp.peak_expr_for(node, info.kept,
+                                          trip).evaluate(env)
+            rloops.append(ResolvedLoop(trip=trip, rbody=rbody,
+                                       extra_bytes=extra, sizes=bsizes,
+                                       outer_y=outer_y,
+                                       outer_carry=outer_carry))
+
         out = ResolvedProgram(env=dict(env), nbytes=nbytes,
                               ensure_bytes=ensure, params=params,
                               regen_flops=regen_flops, arena=arena,
-                              value_offsets=offsets or {})
-        out.stats_template, out.peak_bytes = self._replay_stats(nbytes, arena)
+                              value_offsets=offsets or {}, loops=rloops)
+        out.stats_template, out.peak_bytes = self._replay_stats(
+            nbytes, arena, rloops)
         out.fast_ok = (self.memory_limit is None
                        or out.peak_bytes <= self.memory_limit)
         self._resolve_cache[key] = out
         return out
 
-    def _replay_stats(self, nbytes: List[int],
-                      arena_resolved) -> Tuple[MemoryStats, int]:
+    def _replay_stats(self, nbytes: List[int], arena_resolved,
+                      rloops: List[ResolvedLoop] = ()) -> Tuple[MemoryStats, int]:
         """Replay the static alloc/free sequence once for this env.
 
         The fast stream's memory traffic is fully determined by the env
@@ -334,6 +405,15 @@ class Program:
                     mm.free(inst.vid)
                 else:
                     mm.arena_release(inst.vid)
+            elif op == OP_LOOP:
+                # the shared event engine replays the loop's alloc/free
+                # sequence — identical to what the interpreter and the
+                # VM dynamic path drive through their MemoryManagers
+                rl = rloops[inst.lidx]
+                info = self.loops[inst.lidx]
+                info.lp.account(mm, info.node.id, rl.trip,
+                                rl.sizes.__getitem__, rl.outer_y,
+                                rl.outer_carry)
         if arena is not None:
             arena.write_stats(mm.stats)
         return mm.stats, mm.stats.device_peak

@@ -19,6 +19,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from ..ir.graph import Graph, Node, Value
+from ..ir.loop import is_loop_node
 from ..symbolic import Cmp, Interval, ShapeGraph, SymbolicExpr, ZERO
 
 # Relative cost model shared by compile-time pruning (here) and runtime victim
@@ -160,7 +161,10 @@ class RecomputeSearcher:
         same region (another bucket's compile, an overlapping candidate)
         replays cached polynomials instead of rebuilding them term by term.
         """
-        if target.producer is None:
+        if target.producer is None or is_loop_node(target.producer):
+            # rolled loops are remat barriers: re-running a trip-count-many
+            # iteration body is never the cheap side of the trade, and remat
+            # decisions are hoisted out of the body by construction
             return None
         # bounds-based compile-time prune: a target whose worst-case byte
         # count is zero can never free memory, skip the subgraph search
@@ -192,7 +196,8 @@ class RecomputeSearcher:
         while len(sub_ids) < self.max_subgraph:
             # pick the most expensive non-always-live source to absorb
             cand = [s for s in srcs.values()
-                    if not s.is_materialized_input() and s.producer is not None]
+                    if not s.is_materialized_input() and s.producer is not None
+                    and not is_loop_node(s.producer)]    # loops don't absorb
             if not cand:
                 break
             sizes = tuple(s.nbytes_expr.uid for s in cand)
@@ -279,6 +284,8 @@ class RecomputeSearcher:
                 continue
             if v.producer is None or not v.consumers:
                 continue
+            if is_loop_node(v.producer):
+                continue  # loop outputs are remat barriers
             p = pos.get(v.producer.id)
             if p is None:
                 continue

@@ -1,0 +1,310 @@
+"""Rolled-vs-unrolled differential harness for symbolic control flow.
+
+For each of the 4 benchmark archs a small autoregressive decode cell is
+built from the arch's smoke config (its ``d_model`` and input mode); the
+rolled form compiles the ``jax.lax.scan`` with a *symbolic* trip count
+``t`` into a single ``Loop`` node, the oracle is the mechanically
+unrolled DAG (a Python loop at static T) compiled through the identical
+pipeline.  The harness asserts, at trip counts {1, 2, 17}:
+
+  * rolled outputs are **bitwise identical** to the unrolled oracle;
+  * the VM and the reference interpreter running the *same* rolled plan
+    produce bitwise-identical outputs and identical memory stats
+    (``dispatch_ns`` excluded — it is wall time), including under
+    donation, a memory limit that forces eviction+regen across the
+    loop, and a limit neither executor can satisfy (both must raise);
+  * the lowered rolled ``Program`` is O(body): its instruction counts
+    are independent of the declared trip-count range, and smaller than
+    the unrolled Program at T=17;
+  * the device peak is steady-state: past the first iterations it grows
+    only by the t-scaled inputs/outputs (per-iteration temporaries and
+    both carry generations live in trip-count-independent arena slots).
+
+Plus the SPMD-stability regression for trip-count bucketing: two
+``SpecializationTable``s built from the same spec must map every env in
+range to the same bucket key (geometric edges are computed with exact
+integer arithmetic, never float pow).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import optimize, symbolic_dim
+from repro.core.dispatch import SpecializationTable, build_bucket_space
+from repro.core.dispatch.buckets import _geometric_uppers, _nearest_nth_root
+from repro.core.executor.memory import MemoryLimitExceeded
+from repro.core.symbolic import ShapeGraph, declare_dim_ranges
+
+ARCHS = ["llama2_1b", "gemma_2b", "granite_8b", "musicgen_medium"]
+TRIPS = [1, 2, 17]
+T_RANGE = (1, 64)
+B = 2          # static batch: only the trip count is dynamic here
+V = 32         # toy vocab for token-mode archs
+
+
+def _cell(arch):
+    """Decode cell for one arch: (step, param_specs, xs_spec_fn).
+
+    ``step(params, carry, x)`` is one decode step — the *same* function
+    is scanned in the rolled form and repeated in the unrolled oracle,
+    so any output divergence is the pipeline's fault, not the model's.
+    """
+    cfg = get_smoke_config(arch)
+    d = cfg.d_model
+    tokens = cfg.input_mode == "tokens"
+
+    def step(params, c, x):
+        e = params["emb"][x] if tokens else x @ params["wx"]
+        h = jnp.tanh(c @ params["wh"] + e)
+        return h, jnp.sum(h, axis=-1)
+
+    p = {"wh": jax.ShapeDtypeStruct((d, d), jnp.float32),
+         "wb": jax.ShapeDtypeStruct((d, d), jnp.float32),
+         "h0": jax.ShapeDtypeStruct((B, d), jnp.float32)}
+    if tokens:
+        p["emb"] = jax.ShapeDtypeStruct((V, d), jnp.float32)
+        xs_spec = lambda t: jax.ShapeDtypeStruct((t, B), jnp.int32)
+    else:
+        p["wx"] = jax.ShapeDtypeStruct((d, d), jnp.float32)
+        xs_spec = lambda t: jax.ShapeDtypeStruct((t, B, d), jnp.float32)
+    return step, p, xs_spec
+
+
+def _rolled_fn(arch):
+    step, _, _ = _cell(arch)
+
+    def f(params, xs):
+        # `big` is consumed both before and after the scan, so the
+        # scheduler cannot sink it past the loop: it stays live across
+        # the back-edge with an idle span covering the Loop node — the
+        # eviction configs need exactly such a victim
+        big = jnp.tanh(params["wb"])
+        c0 = jnp.tanh(params["h0"] + big[0])
+        cN, ys = jax.lax.scan(lambda c, x: step(params, c, x), c0, xs)
+        return cN @ big, ys
+    return f
+
+
+def _unrolled_fn(arch, T):
+    step, _, _ = _cell(arch)
+
+    def f(params, xs):
+        big = jnp.tanh(params["wb"])
+        c = jnp.tanh(params["h0"] + big[0])
+        ys = []
+        for i in range(T):
+            c, y = step(params, c, xs[i])
+            ys.append(y)
+        return c @ big, jnp.stack(ys)
+    return f
+
+
+def _concrete(arch, T, seed=0):
+    _, p_specs, xs_spec = _cell(arch)
+    rng = np.random.RandomState(seed)
+    params = {}
+    for k, s in p_specs.items():
+        params[k] = jnp.asarray(rng.randn(*s.shape) * 0.2, s.dtype)
+    xs = xs_spec(T)
+    if np.issubdtype(xs.dtype, np.integer):
+        xv = jnp.asarray(rng.randint(0, V, xs.shape), xs.dtype)
+    else:
+        xv = jnp.asarray(rng.randn(*xs.shape) * 0.2, xs.dtype)
+    return params, xv
+
+
+def _compile_rolled(arch, executor, **kw):
+    t = symbolic_dim("t")
+    _, p_specs, xs_spec = _cell(arch)
+    return optimize(_rolled_fn(arch), p_specs, xs_spec(t),
+                    dynamic_dims={"t": T_RANGE}, executor=executor, **kw)
+
+
+def _compile_unrolled(arch, T, **kw):
+    _, p_specs, xs_spec = _cell(arch)
+    return optimize(_unrolled_fn(arch, T), p_specs, xs_spec(T), **kw)
+
+
+def _stats(fn):
+    d = fn.last_report.stats.as_dict()
+    d.pop("dispatch_ns", None)          # wall time, not semantics
+    return d
+
+
+def _assert_bitwise(a, b, msg):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), msg
+
+
+def _per_step_io_bytes(arch):
+    """Bytes of one xs slice + one stacked-y slice: the only t-scaled
+    tensors a steady-state loop is allowed to grow the peak by."""
+    _, _, xs_spec = _cell(arch)
+    x1 = xs_spec(1)
+    x_step = int(np.prod(x1.shape)) * x1.dtype.itemsize
+    y_step = B * 4                      # per-step y is float32 (B,)
+    return x_step + y_step
+
+
+# -- rolled vs unrolled, VM vs interpreter ------------------------------------
+
+
+class TestRolledVsUnrolled:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_bitwise_outputs_and_identical_stats(self, arch):
+        ref = _compile_rolled(arch, "reference")
+        vm = _compile_rolled(arch, "vm")
+        for T in TRIPS:
+            params, xs = _concrete(arch, T, seed=T)
+            r_out = ref(params, xs)
+            r_stats = _stats(ref)
+            v_out = vm(params, xs)
+            v_stats = _stats(vm)
+            _assert_bitwise(r_out, v_out,
+                            f"{arch} T={T}: VM != interpreter")
+            assert r_stats == v_stats, \
+                f"{arch} T={T}: stats diverge: " + str({
+                    k: (r_stats[k], v_stats[k]) for k in r_stats
+                    if r_stats[k] != v_stats[k]})
+            oracle = _compile_unrolled(arch, T)
+            o_out = oracle(params, xs)
+            _assert_bitwise(r_out, o_out,
+                            f"{arch} T={T}: rolled != unrolled oracle")
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_donate_inputs_differential(self, arch):
+        ref = _compile_rolled(arch, "reference", donate_inputs=True)
+        vm = _compile_rolled(arch, "vm", donate_inputs=True)
+        base = _compile_rolled(arch, "vm")
+        for T in (2, 17):
+            params, xs = _concrete(arch, T, seed=T)
+            b_out = base(params, xs)
+            r_out = ref(params, xs)
+            v_out = vm(params, xs)
+            _assert_bitwise(r_out, v_out, f"{arch} T={T} donate: VM != ref")
+            _assert_bitwise(r_out, b_out,
+                            f"{arch} T={T}: donation changed outputs")
+            assert _stats(ref) == _stats(vm)
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_memory_limit_regen_differential(self, arch):
+        free = _compile_rolled(arch, "vm")
+        params, xs = _concrete(arch, 17, seed=17)
+        base_out = free(params, xs)
+        peak = free.last_report.stats.device_peak
+        # tight enough that `big` (idle across the loop) must be evicted
+        # before the Loop's hoisted ensure, loose enough to succeed
+        limit = peak - 512
+        ref = _compile_rolled(arch, "reference", memory_limit=limit)
+        vm = _compile_rolled(arch, "vm", memory_limit=limit)
+        r_out = ref(params, xs)
+        v_out = vm(params, xs)
+        _assert_bitwise(r_out, v_out, f"{arch} limited: VM != interpreter")
+        _assert_bitwise(r_out, base_out,
+                        f"{arch}: eviction+regen changed outputs")
+        r_stats, v_stats = _stats(ref), _stats(vm)
+        assert r_stats == v_stats
+        assert r_stats["evictions"] >= 1, \
+            "limit was meant to force an eviction across the loop"
+        assert r_stats["recomputes"] + r_stats["reloads"] >= 1
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_impossible_limit_raises_on_both(self, arch):
+        params, xs = _concrete(arch, 17, seed=17)
+        # below the un-evictable working set (inputs alone exceed it)
+        limit = sum(int(np.asarray(v).nbytes) for v in params.values())
+        for executor in ("reference", "vm"):
+            fn = _compile_rolled(arch, executor, memory_limit=limit)
+            with pytest.raises(MemoryLimitExceeded):
+                fn(params, xs)
+
+
+# -- plan size and steady-state memory ----------------------------------------
+
+
+class TestLoopPlanShape:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_program_is_o_body_not_o_trip(self, arch):
+        vm = _compile_rolled(arch, "vm")
+        counts = vm.program.counts()
+        assert counts["Loop"] == 1
+        # widening the declared trip range must not change the program
+        t = symbolic_dim("t")
+        _, p_specs, xs_spec = _cell(arch)
+        wide = optimize(_rolled_fn(arch), p_specs, xs_spec(t),
+                        dynamic_dims={"t": (1, 4096)}, executor="vm")
+        assert wide.program.counts() == counts
+        # and the unrolled T=17 program really is O(T * body)
+        unrolled = _compile_unrolled(arch, 17)
+        assert (unrolled.program.counts()["Compute"]
+                > 17 * max(1, counts["Compute"]))
+        assert sum(counts.values()) < sum(unrolled.program.counts().values())
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_steady_state_peak_independent_of_trip(self, arch):
+        vm = _compile_rolled(arch, "vm")
+        peaks = {}
+        for T in (2, 17, 33):
+            params, xs = _concrete(arch, T, seed=1)
+            vm(params, xs)
+            peaks[T] = vm.last_report.stats.device_peak
+        step = _per_step_io_bytes(arch)
+        # past the first iterations the peak grows ONLY by the t-scaled
+        # xs input and stacked-y output — the loop's internal arena
+        # (temporaries + both carry generations) is trip-count-independent
+        assert peaks[17] - peaks[2] == 15 * step
+        assert peaks[33] - peaks[17] == 16 * step
+
+
+# -- SPMD-stable trip-count dispatch ------------------------------------------
+
+
+class TestTripCountDispatchSPMDStable:
+    def _table(self, ranges):
+        space = build_bucket_space(ranges, "geometric")
+        return SpecializationTable(space, lambda key, rng: None)
+
+    def test_two_tables_same_bucket_for_every_env(self):
+        # two replicas each build their own table from the same spec —
+        # every in-range trip count must land in the same bucket on both,
+        # or SPMD programs silently diverge at the dispatch boundary
+        for hi in (64, 4096, 100_000):
+            sg1, sg2 = ShapeGraph(), ShapeGraph()
+            declare_dim_ranges(sg1, {"t": (1, hi)})
+            declare_dim_ranges(sg2, {"t": (1, hi)})
+            t1 = self._table(sg1.declared_ranges)
+            t2 = self._table(sg2.declared_ranges)
+            probe = range(1, hi + 1) if hi <= 4096 else \
+                list(range(1, 1000)) + list(range(1, hi + 1, 997)) + [hi]
+            for v in probe:
+                assert t1.key_of({"t": v}) == t2.key_of({"t": v})
+
+    def test_geometric_edges_are_exact_integer_roots(self):
+        # the documented contract: edge k is the nearest integer to
+        # (lo^(n-k) * hi^k)^(1/n), decided by exact integer comparisons
+        for lo, hi, n in [(1, 64, 4), (16, 4096, 4), (1, 10**9, 8),
+                          (3, 7, 4), (5, 5_000_000, 6)]:
+            uppers = _geometric_uppers(lo, hi, n)
+            assert uppers[-1] == hi
+            assert all(a < b for a, b in zip(uppers, uppers[1:]))
+            prev = max(lo, 1) - 1
+            expect = []
+            for k in range(1, n):
+                u = _nearest_nth_root(max(lo, 1) ** (n - k) * hi ** k, n)
+                if u <= prev or u >= hi:
+                    continue
+                expect.append(u)
+                prev = u
+            assert uppers == tuple(expect) + (hi,)
+
+    def test_nearest_nth_root_is_exact(self):
+        for p, n in [(0, 3), (1, 5), (8, 3), (9, 2), (26, 3), (27, 3),
+                     (28, 3), (10**18, 6), (10**18 + 1, 6), (2, 2)]:
+            r = _nearest_nth_root(p, n)
+            # r is within half a unit of the real root: the two exact
+            # integer inequalities that define "nearest"
+            assert (2 * r - 1) ** n <= 2 ** n * p if r > 0 else p == 0
+            assert 2 ** n * p < (2 * r + 1) ** n

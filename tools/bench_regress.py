@@ -43,6 +43,11 @@ KINDS: Dict[str, Tuple[str, List[Tuple[str, bool]]]] = {
         ("scheduler.speedup", True),     # impact cache vs legacy hot loop
         ("miss_path.miss_over_hit", False),   # background serve penalty
     ]),
+    "loop": ("BENCH_loop.json", [
+        ("plan_size_ratio", True),       # unrolled/rolled instruction count
+        ("compile_speedup_vs_unrolled", True),
+        ("exec_speedup_vs_unrolled", True),
+    ]),
 }
 
 
