@@ -30,9 +30,9 @@ def main() -> None:
     steps = 6 if args.fast else 12
 
     from benchmarks import (compile_bench, dispatch_bench, exec_bench,
-                            loop_bench, memplan_bench, remat_sweep,
-                            roofline, scheduler_micro, symbolic_coverage,
-                            table1_dynamic_training)
+                            loop_bench, memplan_bench, obs_bench,
+                            remat_sweep, roofline, scheduler_micro,
+                            symbolic_coverage, table1_dynamic_training)
 
     # paper Table 1: dynamic vs static vs BladeDISC++ training
     rows = _timed(
@@ -123,6 +123,20 @@ def main() -> None:
     with open("BENCH_loop.json", "w") as f:
         json.dump({"rows": rows}, f, indent=2)
     print(loop_bench.format_rows(rows), file=sys.stderr)
+
+    # observability: telemetry overhead contract (disabled <=2% asserted
+    # inside) + plan-vs-actual timeline agreement (zero unexplained
+    # allocations asserted inside at every probe env)
+    rows = _timed(
+        "obs", lambda: obs_bench.run(smoke=args.fast),
+        lambda rs: ";".join(
+            f"{r['arch']}:x{r['disabled_over_base']:.3f}"
+            if r["arch"] == "dispatch_chain_micro"
+            else f"{r['arch']}:{r['peak_over_bound']:.3f}"
+            for r in rs))
+    with open("BENCH_obs.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(obs_bench.format_rows(rows), file=sys.stderr)
 
     # roofline readout from the dry-run artifacts (if present)
     try:

@@ -80,7 +80,7 @@ print(f"held over budget: {batcher.pending()} reqs "
       f"{list(batcher.pending_by_bucket())}")
 print(f"dispatch stats: hits={st.bucket_hits} "
       f"specializations={st.specialize_count} "
-      f"last dispatch={st.dispatch_ns/1e3:.0f} us\n")
+      f"last dispatch={st.last_dispatch_ns/1e3:.0f} us\n")
 
 # -- 3. the decode loop itself, rolled ----------------------------------------
 

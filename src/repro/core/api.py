@@ -19,6 +19,7 @@ with LRU retention.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, \
@@ -34,6 +35,7 @@ from .executor.vm import ProgramVM
 from .ir.trace import check_declared_ranges, solve_env, trace_to_graph
 from .lowering import Program, lower_plan
 from .memplan import ArenaPlan, build_arena_plan
+from .obs import NULL_TRACER, DecisionLog, Telemetry, Tracer
 from .remat.planner import ExecutionPlan, build_plan
 from .scheduling.memsim import simulate_peak, simulate_peak_bound
 from .scheduling.scheduler import ScheduleResult, schedule_graph
@@ -53,7 +55,8 @@ def _build_executor(plan: ExecutionPlan, report: "OptimizeReport",
                     executor: str, *,
                     memory_limit: Optional[int],
                     donate_inputs: bool, count_inputs: bool,
-                    size_cache=None, params_cache=None):
+                    size_cache=None, params_cache=None,
+                    tracer=NULL_TRACER):
     """Lower + wrap ``plan`` for one executor kind.
 
     ``executor="vm"`` lowers the plan to a flat :class:`Program` (the
@@ -72,10 +75,13 @@ def _build_executor(plan: ExecutionPlan, report: "OptimizeReport",
                                  size_cache=size_cache,
                                  params_cache=params_cache)
         return interp, None
-    program = lower_plan(plan, memory_limit=memory_limit,
-                         donate_inputs=donate_inputs,
-                         count_inputs=count_inputs,
-                         peak_bound_bytes=report.peak_bound_bytes)
+    with tracer.span("lower") as sp:
+        program = lower_plan(plan, memory_limit=memory_limit,
+                             donate_inputs=donate_inputs,
+                             count_inputs=count_inputs,
+                             peak_bound_bytes=report.peak_bound_bytes)
+        sp.attrs["n_instructions"] = program.n_instructions
+        sp.attrs["has_evict_path"] = program.has_evict_path
     return ProgramVM(program, size_cache=size_cache,
                      params_cache=params_cache), program
 
@@ -195,6 +201,8 @@ def _compile_pipeline(
     guard_env: Optional[Dict[str, int]] = None,
     parent: Optional[PipelineArtifacts] = None,
     collect: bool = False,
+    tracer: Any = NULL_TRACER,
+    decisions: Optional[DecisionLog] = None,
 ) -> Tuple[ExecutionPlan, OptimizeReport, Optional[PipelineArtifacts]]:
     """schedule → remat → memplan over an already-traced graph.
 
@@ -211,6 +219,14 @@ def _compile_pipeline(
     under the tighter bounds) and only memory planning + peak bounds run.
     """
     from .remat.search import respecialize_candidates
+
+    dl = decisions if decisions is not None else DecisionLog()
+
+    def _cmp_delta(before: Dict[str, int]) -> Dict[str, int]:
+        """How many comparisons this phase resolved per layer."""
+        return {k: sg.cmp_stats.get(k, 0) - before.get(k, 0)
+                for k in set(sg.cmp_stats) | set(before)
+                if sg.cmp_stats.get(k, 0) != before.get(k, 0)}
 
     def _clamp(name: str, v: int) -> int:
         iv = sg.declared_ranges.get(name)
@@ -232,84 +248,143 @@ def _compile_pipeline(
     cand_keys: Dict[int, frozenset] = {}
     sched_cache = parent.sched_expr_cache if parent is not None else {}
     remat_cache = parent.remat_expr_cache if parent is not None else {}
-    if parent is not None and enable_scheduling and \
-            sg.verdicts_match(parent.sg, parent.cmp_keys):
-        # incremental fast path: every schedule/remat decision would come
-        # out identical — reuse them; bounds-dependent phases still re-run
-        sched = parent.sched
-        used_sched = parent.used_sched
-        candidates = respecialize_candidates(parent.candidates, sg) \
-            if enable_remat else {}
-        reused = True
-    elif enable_scheduling:
-        with sg.record_cmp_keys() as keys:
-            sched = schedule_graph(graph, sg, impact_expr_cache=sched_cache)
-        recorded |= keys
-        raw_order_ids = tuple(n.id for n in sched.order)
-        if parent is not None and parent.raw_order_ids == raw_order_ids:
-            # the narrowed ranges changed some remat verdict but not the
-            # schedule itself: adopt the parent's guarded + exchanged final
-            # order (already proven no worse at the parent's probe envs)
-            sched = ScheduleResult(list(parent.sched.order),
-                                   sched.symbolic_decisions,
-                                   sched.tiebreak_decisions)
+    cmp0 = dict(sg.cmp_stats)
+    with tracer.span("schedule", n_nodes=len(graph.nodes)) as _ssp:
+        if parent is not None and enable_scheduling and \
+                sg.verdicts_match(parent.sg, parent.cmp_keys):
+            # incremental fast path: every schedule/remat decision would come
+            # out identical — reuse them; bounds-dependent phases still re-run
+            sched = parent.sched
             used_sched = parent.used_sched
-            reused_postpass = True
-        else:
-            env = dict(guard_env) if guard_env else {
-                name: 64 for name in graph.free_symbols()}
-            for name in graph.free_symbols():
-                env.setdefault(name, 64)
-            env = {k: _clamp(k, v) for k, v in env.items()}
-            probe_envs = [env,
-                          {k: _clamp(k, max(1, v // 4)) for k, v in env.items()},
-                          {k: _clamp(k, v * 4) for k, v in env.items()}]
-            base = simulate_peak(graph, graph.nodes, env,
-                                 count_inputs=count_inputs)
-            tuned = simulate_peak(graph, sched.order, env,
-                                  count_inputs=count_inputs)
-            used_sched = tuned.peak_bytes <= base.peak_bytes
-            kept_peak = min(tuned.peak_bytes, base.peak_bytes)
-            if not used_sched:  # keep the better order (never regress)
-                sched = ScheduleResult(list(graph.nodes),
+            candidates = respecialize_candidates(parent.candidates, sg) \
+                if enable_remat else {}
+            reused = True
+            dl.add("bucket-reuse", "schedule+remat", "inherit",
+                   "no compare verdict the parent depended on flips under "
+                   "the narrowed ranges",
+                   n_candidates=len(candidates or {}))
+        elif enable_scheduling:
+            with sg.record_cmp_keys() as keys:
+                sched = schedule_graph(graph, sg,
+                                       impact_expr_cache=sched_cache)
+            recorded |= keys
+            raw_order_ids = tuple(n.id for n in sched.order)
+            if parent is not None and parent.raw_order_ids == raw_order_ids:
+                # the narrowed ranges changed some remat verdict but not the
+                # schedule itself: adopt the parent's guarded + exchanged final
+                # order (already proven no worse at the parent's probe envs)
+                sched = ScheduleResult(list(parent.sched.order),
                                        sched.symbolic_decisions,
                                        sched.tiebreak_decisions)
-            # pairwise-exchange refinement (beyond-paper; guarded at probe
-            # envs); the kept order's peak is already known — only the
-            # refined order needs a fresh simulation
-            from .scheduling.exchange import exchange_pass
-            refined = exchange_pass(graph, sched.order, probe_envs)
-            if simulate_peak(graph, refined, env,
-                             count_inputs=count_inputs).peak_bytes <= kept_peak:
-                sched = ScheduleResult(refined, sched.symbolic_decisions,
-                                       sched.tiebreak_decisions)
-    else:
-        sched = ScheduleResult(list(graph.nodes), 0, 0)
+                used_sched = parent.used_sched
+                reused_postpass = True
+                dl.add("bucket-reuse", "schedule post-pass", "inherit",
+                       "re-run scheduler reproduced the parent's raw order; "
+                       "adopting its guarded + exchanged result")
+            else:
+                env = dict(guard_env) if guard_env else {
+                    name: 64 for name in graph.free_symbols()}
+                for name in graph.free_symbols():
+                    env.setdefault(name, 64)
+                env = {k: _clamp(k, v) for k, v in env.items()}
+                probe_envs = [env,
+                              {k: _clamp(k, max(1, v // 4))
+                               for k, v in env.items()},
+                              {k: _clamp(k, v * 4) for k, v in env.items()}]
+                base = simulate_peak(graph, graph.nodes, env,
+                                     count_inputs=count_inputs)
+                tuned = simulate_peak(graph, sched.order, env,
+                                      count_inputs=count_inputs)
+                used_sched = tuned.peak_bytes <= base.peak_bytes
+                kept_peak = min(tuned.peak_bytes, base.peak_bytes)
+                dl.add("schedule-guard", "scheduled order",
+                       "keep" if used_sched else "revert",
+                       f"scheduled peak {tuned.peak_bytes:,} vs program "
+                       f"order {base.peak_bytes:,} at the guard env",
+                       guard_env=dict(env),
+                       scheduled_peak=tuned.peak_bytes,
+                       base_peak=base.peak_bytes)
+                if not used_sched:  # keep the better order (never regress)
+                    sched = ScheduleResult(list(graph.nodes),
+                                           sched.symbolic_decisions,
+                                           sched.tiebreak_decisions)
+                # pairwise-exchange refinement (beyond-paper; guarded at probe
+                # envs); the kept order's peak is already known — only the
+                # refined order needs a fresh simulation
+                from .scheduling.exchange import exchange_pass
+                with tracer.span("exchange") as _xsp:
+                    n_sw0 = len(dl.entries("exchange-swap"))
+                    refined = exchange_pass(graph, sched.order, probe_envs,
+                                            decisions=dl)
+                    _xsp.attrs["n_swaps"] = \
+                        len(dl.entries("exchange-swap")) - n_sw0
+                refined_peak = simulate_peak(
+                    graph, refined, env, count_inputs=count_inputs).peak_bytes
+                if refined_peak <= kept_peak:
+                    sched = ScheduleResult(refined, sched.symbolic_decisions,
+                                           sched.tiebreak_decisions)
+                    _xsp.attrs["adopted"] = True
+                else:
+                    dl.add("schedule-guard", "exchange refinement", "discard",
+                           f"refined peak {refined_peak:,} exceeds kept "
+                           f"peak {kept_peak:,} at the guard env")
+                    _xsp.attrs["adopted"] = False
+        else:
+            sched = ScheduleResult(list(graph.nodes), 0, 0)
+        _ssp.attrs.update(reused_parent=reused,
+                          reused_postpass=reused_postpass,
+                          used_scheduled_order=used_sched,
+                          cmp=_cmp_delta(cmp0))
 
     arena_plan = None
     if memory_plan == "arena":
-        arena_plan = build_arena_plan(graph, sched.order, sg,
-                                      donate_inputs=donate_inputs)
+        with tracer.span("memplan") as _msp:
+            arena_plan = build_arena_plan(graph, sched.order, sg,
+                                          donate_inputs=donate_inputs)
+            _msp.attrs.update(
+                n_slots=arena_plan.n_slots,
+                arena_bound_bytes=arena_plan.arena_bound_bytes,
+                n_provable_reuses=arena_plan.n_provable_reuses,
+                n_checked_reuses=arena_plan.n_checked_reuses)
+            dl.add("slot-pack", "arena",
+                   f"{arena_plan.n_slots} slots",
+                   "liveness intervals packed by symbolic-size compatibility "
+                   "(reuse proven through the shape graph)",
+                   n_provable_reuses=arena_plan.n_provable_reuses,
+                   n_checked_reuses=arena_plan.n_checked_reuses,
+                   arena_bound_bytes=arena_plan.arena_bound_bytes)
     if candidates is not None:
         plan = ExecutionPlan(graph=graph, order=list(sched.order),
                              shape_graph=sg, candidates=candidates,
                              arena_plan=arena_plan)
     else:
-        with sg.record_cmp_keys() as keys:
-            plan = build_plan(graph, sched, sg, enable_remat=enable_remat,
-                              max_subgraph=max_subgraph,
-                              arena_plan=arena_plan,
-                              remat_expr_cache=remat_cache,
-                              cand_keys_out=cand_keys if collect else None,
-                              parent_remat=None if parent is None else
-                              (parent.sg, parent.candidates,
-                               parent.cand_cmp_keys))
+        cmp1 = dict(sg.cmp_stats)
+        with tracer.span("remat") as _rsp:
+            with sg.record_cmp_keys() as keys:
+                plan = build_plan(graph, sched, sg, enable_remat=enable_remat,
+                                  max_subgraph=max_subgraph,
+                                  arena_plan=arena_plan,
+                                  remat_expr_cache=remat_cache,
+                                  cand_keys_out=cand_keys if collect else None,
+                                  parent_remat=None if parent is None else
+                                  (parent.sg, parent.candidates,
+                                   parent.cand_cmp_keys))
+            _rsp.attrs.update(n_candidates=plan.n_candidates,
+                              n_recomputable=plan.n_recomputable,
+                              n_static_regen=plan.n_static_regen,
+                              cmp=_cmp_delta(cmp1))
         recorded |= keys
+        for vid, method in sorted(plan.static_methods.items()):
+            dl.add("remat-static", f"%{vid}", method,
+                   "interval bounds over the declared ranges fix the cheaper "
+                   "regeneration method at compile time")
     peak_lo = peak_hi = None
     if sg.declared_ranges:  # without ranges the bound is vacuous (hi = None)
-        peak_lo, peak_hi = simulate_peak_bound(graph, sched.order, sg,
-                                               count_inputs=count_inputs,
-                                               donate_inputs=donate_inputs)
+        with tracer.span("bounds") as _bsp:
+            peak_lo, peak_hi = simulate_peak_bound(
+                graph, sched.order, sg, count_inputs=count_inputs,
+                donate_inputs=donate_inputs)
+            _bsp.attrs.update(peak_bound_lo=peak_lo, peak_bound_bytes=peak_hi)
     report = OptimizeReport(schedule=sched,
                             n_candidates=plan.n_candidates,
                             n_recomputable=plan.n_recomputable,
@@ -349,12 +424,21 @@ class DynamicShapeFunction:
                  executor: str = "vm",
                  table: Optional[SpecializationTable] = None,
                  table_factory: Optional[
-                     Callable[[Optional[int]], SpecializationTable]] = None):
+                     Callable[[Optional[int]], SpecializationTable]] = None,
+                 tracer: Optional[Tracer] = None,
+                 decisions: Optional[DecisionLog] = None):
         self.plan = plan
         self._in_tree = in_tree
         self._out_tree = out_tree
         self.report = report
         self.executor = executor
+        # observability: compile-span tree + decision log (shared with every
+        # bucket compile), per-call telemetry off by default (see
+        # enable_telemetry — the disabled hot path pays one attribute test)
+        self.trace = tracer if tracer is not None else Tracer()
+        self.decisions = decisions if decisions is not None else DecisionLog()
+        self._telemetry: Optional[Telemetry] = None
+        self._dispatch_ns_total = 0
         # `interp` is the runner for the monolithic plan: a ProgramVM over
         # the lowered Program (default) or the reference PlanInterpreter.
         # A background table already lowered the identical whole-range plan
@@ -365,7 +449,8 @@ class DynamicShapeFunction:
         else:
             self.interp, self._program = _build_executor(
                 plan, report, executor, memory_limit=memory_limit,
-                donate_inputs=donate_inputs, count_inputs=count_inputs)
+                donate_inputs=donate_inputs, count_inputs=count_inputs,
+                tracer=self.trace)
         self.last_report: Optional[RunReport] = None
         self._table = table
         self._table_factory = table_factory
@@ -379,6 +464,7 @@ class DynamicShapeFunction:
                 f"pytree structure mismatch: traced {self._in_tree}, got {in_tree}")
         if self._table is None:
             outs, report = self.interp.run(flat)
+            prog = self._program
         else:
             t0 = time.perf_counter_ns()
             env = solve_env(self.plan.graph, flat)
@@ -402,11 +488,28 @@ class DynamicShapeFunction:
             # (shared table state could have moved under concurrent traffic)
             self.last_bucket = bp.key if bp.key is not None \
                 else self._table.key_of(env)
-            report.stats.dispatch_ns = dispatch_ns
-            report.stats.bucket_hits = self._table.hits
-            report.stats.specialize_count = self._table.specialize_count
+            st = report.stats
+            st.last_dispatch_ns = dispatch_ns
+            self._dispatch_ns_total += dispatch_ns
+            st.dispatch_ns_total = self._dispatch_ns_total
+            st.bucket_hits = self._table.hits
+            st.specialize_count = self._table.specialize_count
+            prog = bp.program
         self.last_report = report
+        tel = self._telemetry
+        if tel is not None:
+            self._record_call(tel, report, prog)
         return tree_util.tree_unflatten(self._out_tree, outs)
+
+    def _record_call(self, tel: Telemetry, report: RunReport,
+                     program: Optional[Program]) -> None:
+        """Telemetry-enabled path only (never reached when disabled)."""
+        trips: Tuple[int, ...] = ()
+        if program is not None and program.loops:
+            trips = tuple(rl.trip
+                          for rl in program.resolve(report.env).loops)
+        key = self.last_bucket if self._table is not None else None
+        tel.on_call(key, report, program=program, loop_trips=trips)
 
     def _check_declared(self, env: Dict[str, int]) -> None:
         """Declared-range contract check against the *whole-range* graph —
@@ -414,6 +517,56 @@ class DynamicShapeFunction:
         edge bucket and fail there with a misleading sub-range message.
         Same helper both executors use on the non-bucketed path."""
         check_declared_ranges(self.plan.shape_graph, env)
+
+    # -- observability ----------------------------------------------------------
+    def explain(self, env: Optional[Dict[str, int]] = None) -> str:
+        """Human-readable compile report: phase spans, decision log,
+        per-slot symbolic sizes + liveness intervals, frozen-vs-runtime
+        remat decisions, bucket table — and, when ``env`` is given, the
+        plan-vs-actual memory timeline diff at that dim binding."""
+        from .obs.explain import build_explain
+        return build_explain(self, env=env)
+
+    def memory_timeline(self, env: Mapping[str, int]):
+        """Plan-vs-actual :class:`~repro.core.obs.timeline.TimelineDiff`
+        at one env: reconstructed actual arena occupancy over the program
+        counter, diffed against the plan's predicted occupancy (VM
+        executor only — the reference interpreter has no lowered stream).
+        Uses the env's bucket Program when one is resident."""
+        from .obs.timeline import diff_timeline
+        env = dict(env)
+        prog = self._program
+        if self._table is not None:
+            bp = self._table.peek(self._table.key_of(env))
+            if bp is not None and bp.program is not None:
+                prog = bp.program
+        if prog is None:
+            raise ValueError(
+                'memory_timeline requires executor="vm" (no lowered '
+                "Program under the reference interpreter)")
+        return diff_timeline(prog, env)
+
+    def enable_telemetry(self, capacity: int = 256,
+                         sample_timeline_every: int = 0) -> Telemetry:
+        """Attach a per-call telemetry ring (see
+        :class:`repro.core.obs.Telemetry`).  ``sample_timeline_every=N``
+        additionally reconstructs the exact per-instruction memory
+        timeline of every N-th call (off the hot path, VM executor only).
+        Returns the live aggregate; read it any time, detach with
+        :meth:`disable_telemetry`."""
+        self._telemetry = Telemetry(
+            capacity=capacity, sample_timeline_every=sample_timeline_every)
+        return self._telemetry
+
+    def disable_telemetry(self) -> Optional[Telemetry]:
+        """Detach and return the telemetry aggregate (``None`` if off).
+        The hot path reverts to the single disabled-check immediately."""
+        tel, self._telemetry = self._telemetry, None
+        return tel
+
+    @property
+    def telemetry(self) -> Optional[Telemetry]:
+        return self._telemetry
 
     @property
     def program(self) -> Optional[Program]:
@@ -491,7 +644,9 @@ class DynamicShapeFunction:
                                     count_inputs=self.interp.count_inputs,
                                     executor=self.executor,
                                     table=table,
-                                    table_factory=self._table_factory)
+                                    table_factory=self._table_factory,
+                                    tracer=self.trace,
+                                    decisions=self.decisions)
 
 
 def optimize(
@@ -558,7 +713,11 @@ def optimize(
     if executor not in _EXECUTORS:
         raise ValueError(
             f"executor must be one of {_EXECUTORS}, got {executor!r}")
-    graph, _ = trace_to_graph(fn, *example_args, **example_kwargs)
+    tracer = Tracer()
+    decisions = DecisionLog()
+    with tracer.span("trace") as _tsp:
+        graph, _ = trace_to_graph(fn, *example_args, **example_kwargs)
+        _tsp.attrs["n_nodes"] = len(graph.nodes)
     sg = shape_graph if shape_graph is not None else ShapeGraph()
     if dynamic_dims:
         known = graph.free_symbols()
@@ -575,7 +734,9 @@ def optimize(
                  donate_inputs=donate_inputs,
                  count_inputs=count_inputs,
                  max_subgraph=max_subgraph,
-                 guard_env=guard_env)
+                 guard_env=guard_env,
+                 tracer=tracer,
+                 decisions=decisions)
     # collect the schedule/remat artifacts + their compare-key dependencies
     # so per-bucket specialization can re-run incrementally
     plan, report, artifacts = _compile_pipeline(graph, sg, collect=True,
@@ -593,13 +754,25 @@ def optimize(
         def table_factory(limit: Optional[int],
                           _space=space) -> SpecializationTable:
             def compile_bucket(key, ranges) -> BucketPlan:
-                sub_sg = sg.specialized(ranges)
-                b_plan, b_report, _ = _compile_pipeline(
-                    graph, sub_sg, parent=artifacts, **knobs)
-                runner, b_program = _build_executor(
-                    b_plan, b_report, executor, memory_limit=limit,
-                    donate_inputs=donate_inputs, count_inputs=count_inputs,
-                    size_cache=size_cache, params_cache=params_cache)
+                # a background-worker compile shows up as its own root span
+                # (the tracer's span stack is thread-local) tagged here, so
+                # traces distinguish swap-in compiles from blocking ones
+                bg = threading.current_thread().name.startswith("specialize")
+                with tracer.span("specialize", bucket=key,
+                                 background=bg) as sp:
+                    sub_sg = sg.specialized(ranges)
+                    b_plan, b_report, _ = _compile_pipeline(
+                        graph, sub_sg, parent=artifacts, **knobs)
+                    runner, b_program = _build_executor(
+                        b_plan, b_report, executor, memory_limit=limit,
+                        donate_inputs=donate_inputs,
+                        count_inputs=count_inputs,
+                        size_cache=size_cache, params_cache=params_cache,
+                        tracer=tracer)
+                    sp.attrs.update(
+                        reused_parent_schedule=b_report.reused_parent_schedule,
+                        reused_parent_postpass=b_report.reused_parent_postpass,
+                        arena_bound_bytes=b_report.arena_bound_bytes)
                 return BucketPlan(key=key, ranges=ranges, plan=b_plan,
                                   report=b_report, interp=runner,
                                   program=b_program)
@@ -608,7 +781,8 @@ def optimize(
                 f_runner, f_program = _build_executor(
                     plan, report, executor, memory_limit=limit,
                     donate_inputs=donate_inputs, count_inputs=count_inputs,
-                    size_cache=size_cache, params_cache=params_cache)
+                    size_cache=size_cache, params_cache=params_cache,
+                    tracer=tracer)
                 fallback = BucketPlan(key=None, ranges=dict(sg.declared_ranges),
                                       plan=plan, report=report,
                                       interp=f_runner, program=f_program)
@@ -627,4 +801,6 @@ def optimize(
         count_inputs=count_inputs,
         executor=executor,
         table=table_factory(memory_limit) if table_factory else None,
-        table_factory=table_factory)
+        table_factory=table_factory,
+        tracer=tracer,
+        decisions=decisions)

@@ -128,6 +128,10 @@ class SpecializationTable:
         self.misses = 0
         self.specialize_count = 0
         self.evictions = 0
+        # per-bucket dispatch distribution (observability: Prometheus
+        # gauges, explain()); keys accumulate forever like _bounds
+        self.hits_by_key: Dict[BucketKey, int] = {}
+        self.misses_by_key: Dict[BucketKey, int] = {}
         # background specialization
         self.background = background
         self.fallback = fallback
@@ -159,9 +163,11 @@ class SpecializationTable:
             bp = self._plans.get(key)
             if bp is not None:
                 self.hits += 1
+                self.hits_by_key[key] = self.hits_by_key.get(key, 0) + 1
                 self._plans.move_to_end(key)
                 return bp, True
             self.misses += 1
+            self.misses_by_key[key] = self.misses_by_key.get(key, 0) + 1
             if self.background:
                 self._submit_background(key)
                 self.fallback_serves += 1
@@ -343,6 +349,18 @@ class SpecializationTable:
     @property
     def n_buckets(self) -> int:
         return self.space.n_buckets
+
+    def per_bucket_stats(self) -> Dict[BucketKey, Dict[str, Any]]:
+        """Per-bucket dispatch distribution + known arena bounds — every
+        bucket traffic has ever touched, resident or evicted."""
+        with self._lock:
+            keys = set(self.hits_by_key) | set(self.misses_by_key) \
+                | set(self._bounds)
+            return {k: {"hits": self.hits_by_key.get(k, 0),
+                        "misses": self.misses_by_key.get(k, 0),
+                        "arena_bound_bytes": self._bounds.get(k),
+                        "resident": k in self._plans}
+                    for k in sorted(keys)}
 
     def stats(self) -> Dict[str, int]:
         with self._lock:

@@ -79,6 +79,9 @@ class PlanInterpreter:
             size_cache if size_cache is not None else {}
         self._params_cache: Dict[Tuple, Dict[int, Dict[str, Any]]] = \
             params_cache if params_cache is not None else {}
+        # optional live-occupancy probe (see ProgramVM.timeline_hook):
+        # called as hook(step, node, mm) after every executed node
+        self.timeline_hook = None
 
     # ---------------------------------------------------------------- run --
     def run(self, flat_args: Sequence[Any],
@@ -251,6 +254,7 @@ class PlanInterpreter:
 
         # -- main loop ----------------------------------------------------------
         order = plan.order
+        hook = self.timeline_hook
         for i, node in enumerate(order):
             step_holder["i"] = i
             pinned_holder["s"] = frozenset(
@@ -318,6 +322,8 @@ class PlanInterpreter:
                 seen.add(iv.id)
                 remaining[iv.id] -= sum(1 for x in node.invals if x.id == iv.id)
                 maybe_free(iv.id)
+            if hook is not None:
+                hook(i, node, mm)
 
         outputs = [materialize(v) for v in g.outputs]
         if arena is not None:

@@ -51,6 +51,11 @@ class ProgramVM:
         # bucket executor; keys are namespaced by graph uid inside resolve)
         self._size_cache = size_cache
         self._params_cache = params_cache
+        # optional live-occupancy probe, dynamic (eviction) stream only:
+        # called as hook(idx, inst, mm) after every executed instruction.
+        # The fast stream is never instrumented — its occupancy curve is
+        # exactly reconstructible off the hot path (obs.timeline)
+        self.timeline_hook = None
 
     # knobs live on the lowered artifact (they shaped the emission)
     @property
@@ -310,7 +315,8 @@ class ProgramVM:
 
         # -- instruction loop -------------------------------------------------
         outputs: List[Any] = []
-        for inst in prog.instructions:
+        hook = self.timeline_hook
+        for idx, inst in enumerate(prog.instructions):
             op = inst.op
             if op == OP_COMPUTE:
                 ins = [storage[r] if storage[r] is not None else materialize(r)
@@ -379,6 +385,8 @@ class ProgramVM:
                     free_reg(inst.reg, inst.counted)
             else:  # OP_RETURN
                 outputs = [materialize(r) for r in inst.regs]
+            if hook is not None:
+                hook(idx, inst, mm)
         if arena is not None:
             arena.write_stats(mm.stats)
         return outputs, mm.stats

@@ -133,6 +133,11 @@ class ArenaAllocator:
 
     # -- reporting -------------------------------------------------------------
     @property
+    def in_use_bytes(self) -> int:
+        """Live bytes currently backed by the arena (externals excluded)."""
+        return self._in_use
+
+    @property
     def arena_bytes(self) -> int:
         """Final arena size: the planned reserve, grown if runtime churn
         (remat realloc into foreign slots) pushed live bytes past it."""

@@ -1,0 +1,149 @@
+"""Runtime telemetry: a per-call ring buffer with a strict overhead budget.
+
+The contract, enforced by ``tests/test_obs.py`` and ``benchmarks/
+obs_bench.py``: with telemetry *disabled* the dispatch hot path pays one
+attribute load and an ``is None`` test — no allocation, no locking, no
+dict probe — and stays within 2% of the uninstrumented baseline on the
+exec_bench dispatch-chain microbench.  With telemetry *enabled*, each
+call appends one :class:`CallRecord` to a fixed-capacity ring.
+
+The ring is deliberately single-writer lock-free: ``DynamicShapeFunction``
+serializes calls per instance (the dispatch path is not re-entrant), so a
+monotonically increasing write index into a preallocated slot list needs
+no CAS.  Readers (`records()`) snapshot by index without blocking the
+writer; a torn read can only surface a *complete* older record, never a
+partial one, because slots are replaced wholesale (tuple assignment is
+atomic under the GIL).
+
+Per-instruction memory timelines are *not* sampled by instrumenting the
+VM fast stream — that would put a branch in the hottest loop.  Because
+the fast stream's memory traffic is fully determined by the env (the
+``Program.resolve`` replay fact), an enabled sampler reconstructs the
+exact timeline off the hot path via :func:`.timeline.actual_timeline`
+every ``sample_timeline_every``-th call.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+
+class CallRecord(NamedTuple):
+    """One dispatched call, as the ring stores it (flat, allocation-light)."""
+
+    seq: int                            # 0-based call number
+    bucket_key: Optional[Tuple]         # specialization bucket; None = unbucketed
+    env: Tuple[Tuple[str, int], ...]    # sorted dim binding
+    wall_s: float
+    dispatch_ns: int                    # this call's dispatch overhead
+    device_peak: int
+    arena_bytes: int
+    evictions: int
+    recomputes: int
+    reloads: int
+    donated_reuses: int
+    loop_trips: Tuple[int, ...]         # per rolled loop, program order
+
+
+class TelemetryRing:
+    """Fixed-capacity single-writer ring of :class:`CallRecord`."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("ring capacity must be >= 1")
+        self.capacity = capacity
+        self._slots: List[Optional[CallRecord]] = [None] * capacity
+        self._count = 0                 # monotonic; next write position
+
+    def push(self, rec: CallRecord) -> None:
+        self._slots[self._count % self.capacity] = rec
+        self._count += 1
+
+    def __len__(self) -> int:
+        return min(self._count, self.capacity)
+
+    @property
+    def total_pushed(self) -> int:
+        return self._count
+
+    @property
+    def dropped(self) -> int:
+        """Records overwritten because the ring wrapped."""
+        return max(0, self._count - self.capacity)
+
+    def records(self) -> List[CallRecord]:
+        """Oldest-to-newest snapshot of the retained records."""
+        n, cap = self._count, self.capacity
+        if n <= cap:
+            return [r for r in self._slots[:n] if r is not None]
+        start = n % cap
+        out = self._slots[start:] + self._slots[:start]
+        return [r for r in out if r is not None]
+
+
+@dataclass(frozen=True)
+class AdmissionEvent:
+    """One admission-control hold: a bucket group the batcher refused to
+    drain because its arena bound exceeded the memory budget."""
+
+    key: Tuple                          # bucket key (dim upper bounds)
+    label: str                          # human-readable bucket label
+    required_bytes: int                 # the group's arena_bound_bytes
+    available_bytes: int                # the batcher's memory_budget
+    queue_depth: int                    # requests held in this group
+
+
+class Telemetry:
+    """Per-function telemetry aggregate: ring + running totals + sampled
+    timelines.  Created by ``DynamicShapeFunction.enable_telemetry()``."""
+
+    def __init__(self, capacity: int = 256, sample_timeline_every: int = 0,
+                 max_timelines: int = 8):
+        self.ring = TelemetryRing(capacity)
+        self.sample_timeline_every = sample_timeline_every
+        self.max_timelines = max_timelines
+        self.n_calls = 0
+        self.wall_s_total = 0.0
+        self.dispatch_ns_total = 0
+        self.calls_by_bucket: Dict[Optional[Tuple], int] = {}
+        # (seq, timeline) pairs, newest kept; see .timeline.actual_timeline
+        self.timelines: List[Tuple[int, Any]] = []
+
+    def on_call(self, bucket_key: Optional[Tuple], report: Any, *,
+                program: Any = None,
+                loop_trips: Tuple[int, ...] = ()) -> None:
+        """Record one dispatched call.  Runs only when telemetry is
+        enabled — the disabled path never reaches this method."""
+        st = report.stats
+        seq = self.n_calls
+        self.n_calls += 1
+        self.wall_s_total += report.wall_s
+        self.dispatch_ns_total += st.last_dispatch_ns
+        self.calls_by_bucket[bucket_key] = \
+            self.calls_by_bucket.get(bucket_key, 0) + 1
+        self.ring.push(CallRecord(
+            seq=seq, bucket_key=bucket_key,
+            env=tuple(sorted(report.env.items())),
+            wall_s=report.wall_s, dispatch_ns=st.last_dispatch_ns,
+            device_peak=st.device_peak, arena_bytes=st.arena_bytes,
+            evictions=st.evictions, recomputes=st.recomputes,
+            reloads=st.reloads, donated_reuses=st.donated_reuses,
+            loop_trips=loop_trips))
+        every = self.sample_timeline_every
+        if every and program is not None and seq % every == 0:
+            from .timeline import actual_timeline
+            self.timelines.append((seq, actual_timeline(program, report.env)))
+            if len(self.timelines) > self.max_timelines:
+                del self.timelines[:len(self.timelines) - self.max_timelines]
+
+    def summary(self) -> Dict[str, Any]:
+        return dict(
+            n_calls=self.n_calls,
+            wall_s_total=self.wall_s_total,
+            dispatch_ns_total=self.dispatch_ns_total,
+            ring_retained=len(self.ring),
+            ring_dropped=self.ring.dropped,
+            calls_by_bucket={str(k): v
+                             for k, v in self.calls_by_bucket.items()},
+            timelines_sampled=len(self.timelines))

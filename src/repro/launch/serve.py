@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, get_smoke_config
+from ..core.obs import AdmissionEvent
 from ..models import decode_step, forward, init_cache, init_params
 
 
@@ -81,6 +82,12 @@ class BucketBatcher:
         self.memory_budget = memory_budget
         # bucket key -> queued (env, payload), FIFO within a bucket
         self._queue: "OrderedDict[Tuple[int, ...], List[Tuple[Dict[str, int], Any]]]" = OrderedDict()
+        # admission-control observability: cumulative hold count, per-bucket
+        # breakdown, and the most recent structured events (bounded — a
+        # perpetually-held bucket must not grow memory drain after drain)
+        self.held_count = 0
+        self.held_by_key: Dict[Tuple[int, ...], int] = {}
+        self.admission_events: "deque[AdmissionEvent]" = deque(maxlen=256)
 
     def submit(self, env: Mapping[str, int], payload: Any = None) -> Tuple[int, ...]:
         """Queue one request; returns the bucket key it grouped under.
@@ -129,6 +136,16 @@ class BucketBatcher:
             bound = self.table.arena_bound_bytes(key)
             if self.memory_budget is not None and bound is not None \
                     and bound > self.memory_budget:
+                # structured admission event: what was refused, what it
+                # needed, what was available, and how deep its queue is —
+                # the silent-hold observability gap this surface closes
+                self.held_count += 1
+                self.held_by_key[key] = self.held_by_key.get(key, 0) + 1
+                self.admission_events.append(AdmissionEvent(
+                    key=key, label=self.table.space.describe(key),
+                    required_bytes=bound,
+                    available_bytes=self.memory_budget,
+                    queue_depth=len(reqs)))
                 held[key] = reqs
                 continue
             # resident plans carry their lowered Program; peek only — a
@@ -142,6 +159,13 @@ class BucketBatcher:
                 else resident.n_instructions))
         self._queue = held
         return admitted
+
+    def metrics_text(self, prefix: str = "repro") -> str:
+        """Prometheus text metrics for this batcher + its function:
+        per-bucket hit/miss/arena-bound series and the admission-control
+        counters (``held_total``, per-bucket holds, queue depth)."""
+        from ..core.obs import prometheus_text
+        return prometheus_text(fn=self.fn, batcher=self, prefix=prefix)
 
 
 def serve(cfg, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,

@@ -216,7 +216,8 @@ class TestDispatch:
             st = fn.last_report.stats
             assert st.specialize_count == 1       # no re-planning on hits
             assert st.bucket_hits == i + 1
-            assert st.dispatch_ns > 0
+            assert st.last_dispatch_ns > 0
+            assert st.dispatch_ns_total >= st.last_dispatch_ns
         assert table.peek(fn.last_bucket).plan is plan_before
 
     def test_lru_eviction_and_recompile(self):

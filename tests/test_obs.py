@@ -1,0 +1,392 @@
+"""Observability contracts: tracing, telemetry, timelines, exports.
+
+Four contract families over :mod:`repro.core.obs`:
+
+  * **tracing** — ``optimize`` records a span forest (phases nested under
+    their parent, attributes attached) and a decision log; the
+    Chrome-trace export is valid Trace Event JSON with children inside
+    their parent's time window;
+  * **telemetry** — the ring is an exact bounded FIFO (property test over
+    capacity x push-count), per-call records carry the stats split
+    (``last_dispatch_ns`` per call, ``dispatch_ns_total`` cumulative),
+    and the *disabled* hot path allocates nothing from obs code — the
+    structural form of the <=2% overhead contract (its wall-clock form
+    lives in ``benchmarks/obs_bench.py``);
+  * **timelines** — the replayed per-instruction occupancy agrees with
+    the compile-time plan: actual arena under the guaranteed bound, zero
+    unexplained allocations, device peak exactly the plan's prediction —
+    including across a rolled ``lax.scan`` loop;
+  * **serve surfaces** — admission control emits structured events and
+    the Prometheus export renders well-formed metric families.
+"""
+import json
+import os
+import threading
+import tracemalloc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.core.obs as obs_pkg
+from repro.core import optimize, symbolic_dim, symbolic_dims
+from repro.core.obs import (CallRecord, DecisionLog, NullTracer,
+                            TelemetryRing, Tracer, chrome_trace,
+                            chrome_trace_json, prometheus_text)
+from repro.launch.serve import BucketBatcher
+
+
+# -- shared compiled functions (compile once per module) -----------------------
+
+@pytest.fixture(scope="module")
+def chain_fn():
+    n, = symbolic_dims("n")
+
+    def chain(x):
+        for _ in range(8):
+            x = jnp.tanh(x * 1.5 + 0.25)
+        return x.sum()
+
+    return optimize(chain, jax.ShapeDtypeStruct((n, 4), jnp.float32),
+                    dynamic_dims={"n": (2, 256)})
+
+
+@pytest.fixture(scope="module")
+def bucketed_fn():
+    b, = symbolic_dims("b")
+
+    def f(w, x):
+        h = jnp.tanh(x @ w)
+        return (h * h).sum()
+
+    return optimize(f,
+                    jax.ShapeDtypeStruct((8, 8), jnp.float32),
+                    jax.ShapeDtypeStruct((b, 8), jnp.float32),
+                    dynamic_dims={"b": (1, 512)},
+                    buckets={"b": [8, 64, 512]})
+
+
+@pytest.fixture(scope="module")
+def loop_fn():
+    t = symbolic_dim("t")
+
+    def f(h0, xs):
+        c0 = jnp.tanh(h0)
+        cN, ys = jax.lax.scan(lambda c, x: (jnp.tanh(c + x), c.sum()),
+                              c0, xs)
+        return cN.sum() + ys.sum()
+
+    return optimize(f,
+                    jax.ShapeDtypeStruct((4,), jnp.float32),
+                    jax.ShapeDtypeStruct((t, 4), jnp.float32),
+                    dynamic_dims={"t": (1, 64)})
+
+
+# -- tracing -------------------------------------------------------------------
+
+class TestTracer:
+    def test_nesting_and_attrs(self):
+        tr = Tracer()
+        with tr.span("outer", kind="test") as o:
+            with tr.span("inner") as i:
+                i.attrs["n"] = 3
+            o.attrs["done"] = True
+        assert [r.name for r in tr.roots] == ["outer"]
+        assert [s.name for s in tr.spans()] == ["outer", "inner"]
+        outer = tr.roots[0]
+        assert outer.attrs == {"kind": "test", "done": True}
+        assert [c.name for c in outer.children] == ["inner"]
+        inner = outer.children[0]
+        assert inner.attrs["n"] == 3
+        # children close inside their parent's window
+        assert outer.t0_ns <= inner.t0_ns <= inner.t1_ns <= outer.t1_ns
+        assert tr.find("inner") == [inner]
+
+    def test_thread_spans_are_separate_roots(self):
+        tr = Tracer()
+
+        def work():
+            with tr.span("bg"):
+                pass
+
+        th = threading.Thread(target=work, name="specialize_0")
+        with tr.span("fg"):
+            th.start()
+            th.join()
+        names = {s.name for s in tr.spans()}
+        assert names == {"fg", "bg"}
+        bg, = tr.find("bg")
+        assert bg.thread_name == "specialize_0"
+
+    def test_null_tracer_absorbs(self):
+        tr = NullTracer()
+        with tr.span("x", a=1) as sp:
+            sp.attrs["b"] = 2          # must not raise
+        assert tr.spans() == []
+
+    def test_optimize_records_phases(self, chain_fn):
+        names = [s.name for s in chain_fn.trace.spans()]
+        assert "trace" in names
+        # find() searches the whole span forest, nested or not
+        for phase in ("schedule", "remat", "memplan", "lower"):
+            assert chain_fn.trace.find(phase), phase
+        mem = chain_fn.trace.find("memplan")[0]
+        assert mem.attrs["n_slots"] >= 1
+        assert mem.duration_ns >= 0
+
+    def test_decision_log_records_slot_pack(self, chain_fn):
+        kinds = {d.kind for d in chain_fn.decisions.entries()}
+        assert "slot-pack" in kinds
+        packs = chain_fn.decisions.entries(kind="slot-pack")
+        assert all(d.kind == "slot-pack" for d in packs)
+
+    def test_bucketed_compile_spans_and_decisions(self, bucketed_fn):
+        bucketed_fn(np.ones((8, 8), np.float32),
+                    np.ones((4, 8), np.float32))
+        spans = [s for s in _walk_all(bucketed_fn.trace)
+                 if s.name == "specialize"]
+        assert spans, "bucket compile recorded no specialize span"
+        assert any("bucket" in s.attrs for s in spans)
+
+
+def _walk_all(tracer):
+    out = []
+    for r in tracer.spans():
+        out.extend(r.walk())
+    return out
+
+
+class TestChromeTrace:
+    def test_export_is_valid_and_nested(self, chain_fn):
+        text = chrome_trace_json(chain_fn.trace)
+        data = json.loads(text)
+        events = data["traceEvents"]
+        spans = [e for e in events if e["ph"] == "X"]
+        assert spans
+        for e in spans:
+            assert e["dur"] >= 0
+            assert isinstance(e["name"], str)
+            for v in e["args"].values():   # JSON-safe attrs only
+                assert isinstance(v, (int, float, str, bool, type(None)))
+
+    def test_counter_events_from_timelines(self, chain_fn):
+        diff = chain_fn.memory_timeline({"n": 8})
+        data = chrome_trace(chain_fn.trace, timelines=[(0, diff.actual)])
+        counters = [e for e in data["traceEvents"] if e["ph"] == "C"]
+        assert len(counters) == len(diff.actual.points)
+        assert counters[0]["args"]["device_used"] >= 0
+
+
+# -- telemetry -----------------------------------------------------------------
+
+def _rec(seq):
+    return CallRecord(seq=seq, bucket_key=None, env=(("n", 8),),
+                      wall_s=0.0, dispatch_ns=0, device_peak=0,
+                      arena_bytes=0, evictions=0, recomputes=0,
+                      reloads=0, donated_reuses=0, loop_trips=())
+
+
+# module-level: the conftest hypothesis shim drives @given tests without
+# pytest fixtures, so property tests cannot take self
+@settings(max_examples=40, deadline=None)
+@given(cap=st.integers(1, 8), n=st.integers(0, 30))
+def test_ring_is_exact_bounded_fifo(cap, n):
+    ring = TelemetryRing(cap)
+    for i in range(n):
+        ring.push(_rec(i))
+    recs = ring.records()
+    assert len(ring) == min(n, cap)
+    assert ring.total_pushed == n
+    assert ring.dropped == max(0, n - cap)
+    # exactly the newest min(n, cap) records, oldest first
+    assert [r.seq for r in recs] == list(range(max(0, n - cap), n))
+
+
+def test_ring_rejects_zero_capacity():
+    with pytest.raises(ValueError):
+        TelemetryRing(0)
+
+
+class TestTelemetry:
+    def test_enable_record_disable(self, bucketed_fn):
+        w = np.ones((8, 8), np.float32)
+        tel = bucketed_fn.enable_telemetry(capacity=4,
+                                           sample_timeline_every=2)
+        try:
+            for b in (2, 2, 30):
+                bucketed_fn(w, np.ones((b, 8), np.float32))
+            assert tel.n_calls == 3
+            recs = tel.ring.records()
+            assert [r.seq for r in recs] == [0, 1, 2]
+            assert recs[0].env == (("b", 2),)
+            assert recs[2].env == (("b", 30),)
+            assert recs[0].bucket_key is not None
+            assert recs[0].bucket_key == recs[1].bucket_key
+            assert recs[2].bucket_key != recs[0].bucket_key
+            # every-2nd-call sampling: calls 0 and 2
+            assert [seq for seq, _tl in tel.timelines] == [0, 2]
+            assert tel.summary()["n_calls"] == 3
+        finally:
+            got = bucketed_fn.disable_telemetry()
+        assert got is tel
+        assert bucketed_fn.telemetry is None
+
+    def test_stats_split_semantics(self, bucketed_fn):
+        w = np.ones((8, 8), np.float32)
+        x = np.ones((2, 8), np.float32)
+        bucketed_fn(w, x)
+        st1 = bucketed_fn.last_report.stats
+        total1 = st1.dispatch_ns_total
+        assert st1.last_dispatch_ns > 0
+        assert total1 >= st1.last_dispatch_ns
+        bucketed_fn(w, x)
+        st2 = bucketed_fn.last_report.stats
+        assert st2.dispatch_ns_total >= total1 + st2.last_dispatch_ns
+        d = st2.as_dict()
+        assert "last_dispatch_ns" in d and "dispatch_ns_total" in d
+        assert "dispatch_ns" not in d
+
+    def test_loop_trips_recorded(self, loop_fn):
+        tel = loop_fn.enable_telemetry()
+        try:
+            loop_fn(np.ones(4, np.float32), np.ones((5, 4), np.float32))
+            recs = tel.ring.records()
+            assert recs[-1].loop_trips == (5,)
+        finally:
+            loop_fn.disable_telemetry()
+
+    def test_disabled_path_allocates_nothing_from_obs(self, chain_fn):
+        """The structural <=2% contract: with telemetry off, a call
+        touches no obs code at all (one attribute test, no allocation)."""
+        obs_dir = os.path.dirname(obs_pkg.__file__)
+        x = np.ones((4, 4), np.float32)
+        chain_fn(x)                               # warm every cache
+        flt = tracemalloc.Filter(True, os.path.join(obs_dir, "*"))
+        tracemalloc.start(5)
+        try:
+            before = tracemalloc.take_snapshot().filter_traces([flt])
+            for _ in range(5):
+                chain_fn(x)
+            after = tracemalloc.take_snapshot().filter_traces([flt])
+        finally:
+            tracemalloc.stop()
+        diff = after.compare_to(before, "lineno")
+        grew = [d for d in diff if d.size_diff > 0]
+        assert not grew, f"obs code allocated on the disabled path: {grew}"
+
+
+# -- timelines -----------------------------------------------------------------
+
+class TestTimeline:
+    def test_plan_vs_actual_agree(self, chain_fn):
+        for n in (2, 32, 256):
+            diff = chain_fn.memory_timeline({"n": n})
+            assert diff.ok, diff.summary()
+            assert diff.unexplained == []
+            assert diff.within_bound
+            # the fast stream's traffic is fully determined by the env,
+            # so the replayed peak must hit the plan's prediction exactly
+            assert diff.actual.peak_device == diff.predicted_peak_device
+            assert len(diff.actual.points) > 0
+
+    def test_loop_timeline_audits_clean(self, loop_fn):
+        for t in (1, 5, 64):
+            diff = loop_fn.memory_timeline({"t": t})
+            assert diff.ok, diff.summary()
+            assert diff.unexplained == []
+            opnames = {p.opname for p in diff.actual.points}
+            assert "Loop" in opnames
+
+    def test_bucketed_timeline_uses_resident_bucket(self, bucketed_fn):
+        w = np.ones((8, 8), np.float32)
+        bucketed_fn(w, np.ones((4, 8), np.float32))
+        diff = bucketed_fn.memory_timeline({"b": 4})
+        assert diff.ok, diff.summary()
+        # the bucket plan's bound (b<=8), far below the whole range's
+        assert diff.arena_bound_bytes is not None
+        mono = bucketed_fn.arena_bound_bytes
+        assert diff.arena_bound_bytes <= mono
+
+    def test_reference_executor_has_no_timeline(self):
+        n, = symbolic_dims("n")
+        fn = optimize(lambda x: (x * x).sum(),
+                      jax.ShapeDtypeStruct((n,), jnp.float32),
+                      dynamic_dims={"n": (2, 16)}, executor="reference")
+        with pytest.raises(ValueError):
+            fn.memory_timeline({"n": 4})
+
+
+# -- explain + serve surfaces --------------------------------------------------
+
+class TestExplain:
+    def test_report_sections(self, bucketed_fn):
+        w = np.ones((8, 8), np.float32)
+        bucketed_fn(w, np.ones((4, 8), np.float32))
+        text = bucketed_fn.explain(env={"b": 4})
+        for needle in ("compile phases", "decisions", "arena slots",
+                       "rematerialization", "bucket dispatch",
+                       "plan vs actual", "verdict: OK"):
+            assert needle in text, f"explain() lacks {needle!r}"
+
+    def test_explain_without_env(self, chain_fn):
+        text = chain_fn.explain()
+        assert "compile phases" in text
+        assert "plan vs actual" not in text
+
+
+class TestServeSurfaces:
+    def test_admission_events(self, bucketed_fn):
+        bat = BucketBatcher(bucketed_fn, memory_budget=1)
+        bat.submit({"b": 2})
+        bat.submit({"b": 2})
+        bat.submit({"b": 100})
+        assert bat.drain() == []
+        assert bat.held_count == 2                 # two distinct groups held
+        assert bat.pending() == 3                  # requests stay queued
+        evs = list(bat.admission_events)
+        assert len(evs) == 2
+        by_depth = {e.queue_depth for e in evs}
+        assert by_depth == {1, 2}
+        for e in evs:
+            assert e.required_bytes > e.available_bytes
+            assert "b" in e.label
+        bat.memory_budget = None                   # lift the budget
+        groups = bat.drain()
+        assert sum(len(g) for g in groups) == 3
+        assert bat.pending() == 0
+
+    def test_prometheus_text(self, bucketed_fn):
+        w = np.ones((8, 8), np.float32)
+        bucketed_fn(w, np.ones((4, 8), np.float32))
+        bat = BucketBatcher(bucketed_fn, memory_budget=1)
+        bat.submit({"b": 2})
+        bat.drain()
+        text = bat.metrics_text()
+        lines = [ln for ln in text.splitlines() if ln]
+        families = {}
+        for ln in lines:
+            if ln.startswith("# TYPE"):
+                _, _, name, kind = ln.split()
+                families[name] = kind
+            elif not ln.startswith("#"):
+                name = ln.split("{")[0].split(" ")[0]
+                assert name in families, f"sample before TYPE: {ln}"
+                float(ln.rsplit(" ", 1)[1])        # value parses
+        assert families["repro_bucket_hits_total"] == "counter"
+        assert families["repro_batcher_held_total"] == "counter"
+        assert families["repro_bucket_arena_bound_bytes"] == "gauge"
+
+    def test_prometheus_with_telemetry(self, bucketed_fn):
+        tel = bucketed_fn.enable_telemetry()
+        try:
+            bucketed_fn(np.ones((8, 8), np.float32),
+                        np.ones((4, 8), np.float32))
+            text = prometheus_text(fn=bucketed_fn)
+            assert "repro_calls_total 1" in text
+            assert "repro_dispatch_ns_total" in text
+        finally:
+            bucketed_fn.disable_telemetry()
+        assert tel.n_calls == 1

@@ -48,6 +48,12 @@ KINDS: Dict[str, Tuple[str, List[Tuple[str, bool]]]] = {
         ("compile_speedup_vs_unrolled", True),
         ("exec_speedup_vs_unrolled", True),
     ]),
+    "obs": ("BENCH_obs.json", [
+        # actual arena / guaranteed bound at the shared probe env —
+        # deterministic, moves only when the planner or replay changes
+        ("peak_over_bound", False),
+        ("disabled_over_base", False),   # the <=2% telemetry contract
+    ]),
 }
 
 
