@@ -29,8 +29,8 @@ def main() -> None:
     args = ap.parse_args()
     steps = 6 if args.fast else 12
 
-    from benchmarks import (compile_bench, dispatch_bench, exec_bench,
-                            loop_bench, memplan_bench, obs_bench,
+    from benchmarks import (bounded_bench, compile_bench, dispatch_bench,
+                            exec_bench, loop_bench, memplan_bench, obs_bench,
                             remat_sweep, roofline, scheduler_micro,
                             symbolic_coverage, table1_dynamic_training)
 
@@ -137,6 +137,19 @@ def main() -> None:
     with open("BENCH_obs.json", "w") as f:
         json.dump({"rows": rows}, f, indent=2)
     print(obs_bench.format_rows(rows), file=sys.stderr)
+
+    # value-dependent bounded dims: measured-tight runtime accounting vs
+    # the pad-to-bound counterfactual (monotone improvement as occupancy
+    # drops + arena <= cap reserve asserted inside at every occupancy)
+    rows = _timed(
+        "bounded", lambda: bounded_bench.run(smoke=args.fast),
+        lambda rs: ";".join(
+            f"{r['arch']}:half{r['tight_over_pad_half']:.2f}"
+            f"/empty{r['tight_over_pad_empty']:.2f}"
+            for r in rs))
+    with open("BENCH_bounded.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(bounded_bench.format_rows(rows), file=sys.stderr)
 
     # roofline readout from the dry-run artifacts (if present)
     try:

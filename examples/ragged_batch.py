@@ -1,0 +1,89 @@
+"""Ragged batch serving: value-dependent bounded dims end to end.
+
+A packed-sequence workload: requests arrive as a padded token batch plus
+a validity mask, the model runs its expensive FFN only on the *valid*
+rows.  How many rows are valid is decided by the input **values** — no
+declared range can know it at compile time.  ``masked_select`` introduces
+a fresh bounded dim ``b <= s``: the planner reserves its slots at the cap
+(the only sound compile-time answer), and at runtime a ``BindDim`` step
+publishes the measured extent so every later fit, free, and peak uses the
+tight size.  Dispatch buckets on the *declared* dims; the bounded dim is
+measured per call inside whichever bucket serves it.
+
+    PYTHONPATH=src python examples/ragged_batch.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import optimize, symbolic_dim
+from repro.kernels import masked_select
+
+S = symbolic_dim("s")         # padded batch rows (declared, bucketed)
+D, F = 32, 128
+
+# 1. The serve step: select valid rows, run the wide FFN only on them.
+
+
+def serve_step(x, mask, w1, w2):
+    rows, n_valid = masked_select(x, mask)       # (b, D), b <= s: bounded
+    h = jax.nn.gelu(rows @ w1)                   # (b, F): propagated
+    y = h @ w2                                   # (b, D)
+    return jnp.sum(y, axis=0), n_valid
+
+
+specs = (jax.ShapeDtypeStruct((S, D), jnp.float32),
+         jax.ShapeDtypeStruct((S,), jnp.bool_),
+         jax.ShapeDtypeStruct((D, F), jnp.float32),
+         jax.ShapeDtypeStruct((F, D), jnp.float32))
+
+# 2. Compile once, bucketed on the declared dim.  The bounded dim never
+#    appears in dynamic_dims — the input decides it, per call.
+fn = optimize(serve_step, *specs, dynamic_dims={"s": (1, 512)},
+              buckets="geometric")
+g = fn.plan.graph
+(bname, cap), = g.bound_dims.items()
+print(f"traced: bounded dim {bname} <= {cap} "
+      f"(reserve {fn.arena_bound_bytes / 2**10:.0f} KiB at the cap)")
+
+# 3. Serve a ragged request stream: same padded size, wildly different
+#    occupancy.  The measured extent is visible in MemoryStats, and the
+#    peak tracks it — not the pad.
+rng = np.random.RandomState(0)
+w1 = jnp.asarray(rng.randn(D, F) * 0.05, jnp.float32)
+w2 = jnp.asarray(rng.randn(F, D) * 0.05, jnp.float32)
+
+print(f"{'rows':>5} {'valid':>5} {'bucket':>7} {'measured':>9} "
+      f"{'peak KiB':>9} {'arena KiB':>10}")
+for s_rows, occ in [(48, 1.0), (48, 0.25), (300, 0.6), (300, 0.02),
+                    (300, 0.0)]:
+    x = jnp.asarray(rng.randn(s_rows, D), jnp.float32)
+    mask = jnp.arange(s_rows) < int(round(s_rows * occ))
+    out, n_valid = fn(x, mask, w1, w2)
+    st = fn.last_report.stats
+    measured = st.measured_dims[bname]
+    assert measured == int(n_valid) == int(round(s_rows * occ))
+    assert st.arena_bytes <= fn.arena_bound_bytes
+    print(f"{s_rows:5d} {int(n_valid):5d} {str(fn.last_bucket):>7} "
+          f"{measured:9d} {st.device_peak / 2**10:9.1f} "
+          f"{st.arena_bytes / 2**10:10.1f}")
+
+# 4. The tight accounting is the whole point: an almost-empty batch peaks
+#    far below a full one of the same padded size.
+peaks = {}
+x = jnp.asarray(rng.randn(300, D), jnp.float32)
+for occ in (1.0, 0.02):
+    fn(x, jnp.arange(300) < int(300 * occ), w1, w2)
+    peaks[occ] = fn.last_report.stats.device_peak
+print(f"padded 300 rows: full-occupancy peak {peaks[1.0] / 2**10:.0f} KiB, "
+      f"2%-occupancy peak {peaks[0.02] / 2**10:.0f} KiB "
+      f"({peaks[0.02] / peaks[1.0]:.2f}x)")
+assert peaks[0.02] < peaks[1.0]
+
+# 5. And the plan stays honest: the replayed timeline at the measured env
+#    audits clean against the compile-time liveness plan.
+diff = fn.memory_timeline(fn.last_report.env)
+assert diff.ok, diff.summary()
+print(f"plan-vs-actual at the measured env: ok "
+      f"({len(diff.actual.points)} instruction points, "
+      f"0 unexplained allocations)")

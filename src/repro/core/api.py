@@ -32,6 +32,7 @@ from .dispatch import BucketKey, BucketPlan, BucketSpace, BucketsSpec, \
     SpecializationTable, build_bucket_space
 from .executor.interpreter import PlanInterpreter, RunReport
 from .executor.vm import ProgramVM
+from .ir.dynamism import complete_bound_env
 from .ir.trace import check_declared_ranges, solve_env, trace_to_graph
 from .lowering import Program, lower_plan
 from .memplan import ArenaPlan, build_arena_plan
@@ -282,15 +283,27 @@ def _compile_pipeline(
                        "re-run scheduler reproduced the parent's raw order; "
                        "adopting its guarded + exchanged result")
             else:
+                # guard envs bind the *base* dims only; value-dependent
+                # bounded dims complete to their caps per probe env (a
+                # bounded dim's guard value must track its cap, not a
+                # fixed 64)
+                free_syms = graph.free_symbols() - set(graph.bound_dims)
                 env = dict(guard_env) if guard_env else {
-                    name: 64 for name in graph.free_symbols()}
-                for name in graph.free_symbols():
+                    name: 64 for name in free_syms}
+                for name in free_syms:
                     env.setdefault(name, 64)
                 env = {k: _clamp(k, v) for k, v in env.items()}
-                probe_envs = [env,
-                              {k: _clamp(k, max(1, v // 4))
-                               for k, v in env.items()},
-                              {k: _clamp(k, v * 4) for k, v in env.items()}]
+
+                def _complete(e: Dict[str, int]) -> Dict[str, int]:
+                    return complete_bound_env(graph, e) \
+                        if graph.bound_dims else e
+
+                probe_envs = [_complete(env),
+                              _complete({k: _clamp(k, max(1, v // 4))
+                                         for k, v in env.items()}),
+                              _complete({k: _clamp(k, v * 4)
+                                         for k, v in env.items()})]
+                env = probe_envs[0]
                 base = simulate_peak(graph, graph.nodes, env,
                                      count_inputs=count_inputs)
                 tuned = simulate_peak(graph, sched.order, env,
@@ -727,6 +740,11 @@ def optimize(
                 f"dynamic_dims names {unknown} are not symbolic dims of the "
                 f"traced function (known: {sorted(known)})")
     declare_dim_ranges(sg, dynamic_dims)
+    # value-dependent bounded dims: the trace introduced fresh symbols with a
+    # cap expression over input dims — declare each so interval/compare
+    # queries answer through the cap without a user-declared range
+    for _bname, _cap in graph.bound_dims.items():
+        sg.declare_bound(_bname, _cap)
 
     knobs = dict(enable_scheduling=enable_scheduling,
                  enable_remat=enable_remat,
@@ -744,7 +762,12 @@ def optimize(
 
     table_factory = None
     if buckets is not None:
-        space = build_bucket_space(sg.declared_ranges, buckets)
+        # bucket space spans base (call-entry) dims only: bound dims are
+        # measured mid-call, so dispatch can never key on them — per-bucket
+        # specialization re-derives their caps from the narrowed base ranges
+        space = build_bucket_space(
+            {k: v for k, v in sg.declared_ranges.items()
+             if k not in graph.bound_dims}, buckets)
         report.buckets = space
         # one shared per-env cache pair across every bucket interpreter:
         # plan swap between buckets re-derives no sizes/params

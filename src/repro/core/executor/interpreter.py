@@ -23,6 +23,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..ir.dynamism import complete_bound_env
 from ..ir.graph import Graph, Node, Value
 from ..ir.loop import loop_body_of
 from ..ir.trace import refine_params, solve_checked_env
@@ -71,6 +72,14 @@ class PlanInterpreter:
             v.id: len([c for c in v.consumers if c.id in plan.pos])
             for v in self.g.values
         }
+        # values whose byte size mentions a bounded dim: their sizes are
+        # re-evaluated per call at the live env (the measured value) and
+        # never enter the shared (cap-valued) size cache
+        self._bound_dep_vids: set = set()
+        if self.g.bound_dims:
+            names = frozenset(self.g.bound_dims)
+            self._bound_dep_vids = {v.id for v in self.g.values
+                                    if v.nbytes_expr.free_vars() & names}
         # per-env caches reused across calls (training repeats shapes).
         # Both depend only on graph + env — never on the op order — so
         # bucketed dispatch passes one shared pair to every per-bucket
@@ -92,11 +101,19 @@ class PlanInterpreter:
             # a caller passing a pre-solved env (the bucketed dispatch hot
             # path) has already validated it and skips both steps
             env = solve_checked_env(g, plan.shape_graph, flat_args)
-        policy = RuntimeRematPolicy(plan, env)
         # namespaced by graph uid: node/value ids restart at 0 per graph,
         # so a cache injected across interpreters must never let one
-        # graph's refined params/sizes answer for another's same-id node
+        # graph's refined params/sizes answer for another's same-id node.
+        # Keyed by the *declared* env: bounded dims complete to caps
+        # deterministically, and measured values stay out of shared caches.
         env_key = (g.uid,) + tuple(sorted(env.items()))
+        env_decl = env
+        env = complete_bound_env(g, env) if g.bound_dims else env
+        # the live env: BindDim-equivalent measuring rebinds bounded dims
+        # here mid-call (a private copy; ``env`` keeps the caps)
+        env_run = dict(env) if g.bound_dims else env
+        bound_dep = self._bound_dep_vids
+        policy = RuntimeRematPolicy(plan, env)
         nbytes = self._size_cache.setdefault(env_key, {})
         refined = self._params_cache.setdefault(env_key, {})
         if len(self._size_cache) > 64:  # bound the per-shape caches
@@ -113,6 +130,9 @@ class PlanInterpreter:
         mm = MemoryManager(self.memory_limit, arena=arena)
 
         def bytes_of(v: Value) -> int:
+            if v.id in bound_dep:
+                # tight size at the live env; bypasses the shared cache
+                return v.nbytes_expr.evaluate(env_run)
             b = nbytes.get(v.id)
             if b is None:
                 b = v.nbytes_expr.evaluate(env)
@@ -310,6 +330,17 @@ class PlanInterpreter:
                 mm.ensure(out_bytes)  # Remat::EvictOp check
                 outs = _bind_node(node, ins, params_of(node))
                 del ins
+                intro = g.bound_intros.get(node.id)
+                if intro is not None:
+                    # the BindDim step: measure, clamp to the cap at the
+                    # live env (chained introducers can match padding
+                    # rows), publish — the kept-output allocs below then
+                    # see the tight size through bytes_of
+                    measured = int(outs[intro.count_out])
+                    cap_val = int(intro.cap.evaluate(env_run))
+                    measured = min(max(measured, 0), cap_val)
+                    env_run[intro.name] = measured
+                    mm.stats.measured_dims[intro.name] = measured
                 for ov, oa in zip(node.outvals, outs):
                     if ov.consumers or ov.id in self._output_ids:
                         storage[ov.id] = oa
@@ -329,4 +360,7 @@ class PlanInterpreter:
         if arena is not None:
             arena.write_stats(mm.stats)
         wall = time.perf_counter() - t0
-        return outputs, RunReport(stats=mm.stats, wall_s=wall, env=env)
+        # bound graphs report the live env (measured extents, not caps);
+        # range-dynamic graphs report the declared env unchanged
+        report_env = env_run if g.bound_dims else env_decl
+        return outputs, RunReport(stats=mm.stats, wall_s=wall, env=report_env)

@@ -45,6 +45,10 @@ class MemoryStats:
     specialize_count: int = 0
     last_dispatch_ns: int = 0
     dispatch_ns_total: int = 0
+    # value-dependent bounded dims: the extents measured by this call's
+    # BindDim steps (bound symbol -> measured value, not the cap).  Empty
+    # for purely range-dynamic graphs.
+    measured_dims: Dict[str, int] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)

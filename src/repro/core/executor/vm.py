@@ -29,9 +29,10 @@ import numpy as np
 from jax import lax
 
 from ..ir.trace import solve_checked_env
-from ..lowering.program import (OP_BIND_ARG, OP_COMPUTE, OP_DONATE,
-                                OP_FREE_SLOT, OP_LOOP, OP_MAYBE_EVICT,
-                                OP_REGEN, Program, ResolvedProgram)
+from ..lowering.program import (OP_BIND_ARG, OP_BIND_DIM, OP_COMPUTE,
+                                OP_DONATE, OP_FREE_SLOT, OP_LOOP,
+                                OP_MAYBE_EVICT, OP_REGEN, Program,
+                                ResolvedProgram)
 from ..memplan.arena import ArenaAllocator
 from ..remat.runtime import RuntimeRematPolicy
 from .interpreter import RunReport
@@ -84,6 +85,9 @@ class ProgramVM:
             outs, stats = self._run_fast(flat_args, resolved)
         else:
             outs, stats = self._run_dynamic(flat_args, resolved, env)
+        if stats.measured_dims:
+            # surface the measured (not cap) bound dims in the report env
+            env = {**resolved.env, **stats.measured_dims}
         wall = time.perf_counter() - t0
         return outs, RunReport(stats=stats, wall_s=wall, env=env)
 
@@ -199,7 +203,20 @@ class ProgramVM:
         ensure_bytes = resolved.ensure_bytes
         death = prog.death_step
 
-        policy = RuntimeRematPolicy(plan, env)
+        # value-dependent bounded dims: per-call overlays.  ``env_run``
+        # starts at the cap-completed resolve env and is rebound by each
+        # BindDim; ``nbytes`` becomes a private copy so measured sizes
+        # never leak into the shared resolve (cap) tables.
+        bound = prog.has_bound_dims
+        env_run = resolved.env
+        if bound:
+            env_run = dict(env_run)
+            nbytes = list(nbytes)
+
+        # the policy's candidate flops expressions may mention bound
+        # symbols (a recompute over a padded payload): evaluate at the
+        # complete resolve env, never the bare declared env
+        policy = RuntimeRematPolicy(plan, resolved.env)
         arena = None
         if resolved.arena is not None:
             arena = ArenaAllocator(plan.arena_plan, resolved.arena)
@@ -329,15 +346,43 @@ class ProgramVM:
                         mm.alloc(vid_of[r], nbytes[r])
                 elif inst.multi:
                     outs = inst.prim.bind(*ins, **p)
-                    for oi, r in inst.store:
-                        storage[r] = outs[oi]
-                        mm.alloc(vid_of[r], nbytes[r])
+                    if inst.defer_regs or inst.extra_store:
+                        # introducing op: payload alloc waits for the
+                        # BindDim (tight size); count scalar reaches its
+                        # register unaccounted when nothing consumes it
+                        for oi, r in inst.store:
+                            storage[r] = outs[oi]
+                            if r not in inst.defer_regs:
+                                mm.alloc(vid_of[r], nbytes[r])
+                        for oi, r in inst.extra_store:
+                            storage[r] = outs[oi]
+                    else:
+                        for oi, r in inst.store:
+                            storage[r] = outs[oi]
+                            mm.alloc(vid_of[r], nbytes[r])
                 else:
                     out = inst.prim.bind(*ins, **p)
                     for _oi, r in inst.store:
                         storage[r] = out
                         mm.alloc(vid_of[r], nbytes[r])
                 del ins
+            elif op == OP_BIND_DIM:
+                # measure the just-computed extent, clamp to the cap at
+                # the current env (chained introducers can match padding
+                # rows), publish it, refresh bound-dependent sizes, then
+                # run the deferred payload alloc at the tight size
+                measured = int(storage[inst.count_reg])
+                cap_val = int(inst.cap_expr.evaluate(env_run))
+                measured = min(max(measured, 0), cap_val)
+                env_run[inst.name] = measured
+                mm.stats.measured_dims[inst.name] = measured
+                exprs = prog.nbytes_exprs
+                for r in prog.bound_dep_regs[inst.name]:
+                    nbytes[r] = exprs[r].evaluate(env_run)
+                for _oi, r in inst.alloc_store:
+                    mm.alloc(vid_of[r], nbytes[r])
+                if inst.drop_count:
+                    storage[inst.count_reg] = None
             elif op == OP_REGEN:
                 state["step"] = inst.step
                 state["pinned"] = inst.pinned
@@ -346,7 +391,13 @@ class ProgramVM:
             elif op == OP_MAYBE_EVICT:   # Remat::EvictOp check
                 state["step"] = inst.step
                 state["pinned"] = inst.pinned
-                mm.ensure(ensure_bytes[inst.cidx])
+                if bound:
+                    # the resolved ensure table holds cap sizes; sum the
+                    # live overlay so pressure checks see measured sizes
+                    comp = prog.computes[inst.cidx]
+                    mm.ensure(sum(nbytes[r] for _oi, r in comp.store))
+                else:
+                    mm.ensure(ensure_bytes[inst.cidx])
             elif op == OP_BIND_ARG:
                 storage[inst.reg] = (flat_args[inst.index]
                                      if inst.index >= 0 else inst.const)

@@ -103,6 +103,11 @@ class Graph:
     in_tree: Any = None
     out_tree: Any = None
     uid: int = field(default_factory=lambda: next(_GRAPH_UIDS))
+    # value-dependent bounded dims (ir.dynamism): insertion-ordered
+    # bound-symbol name -> symbolic cap, and introducing node id ->
+    # BoundIntro record.  Empty for purely range-dynamic graphs.
+    bound_dims: Dict[str, SymbolicExpr] = field(default_factory=dict)
+    bound_intros: Dict[int, Any] = field(default_factory=dict)
 
     _vid: itertools.count = field(default_factory=lambda: itertools.count())
     _nid: itertools.count = field(default_factory=lambda: itertools.count())
@@ -163,4 +168,5 @@ class Graph:
             "inputs": len(self.inputs),
             "consts": len(self.consts),
             "outputs": len(self.outputs),
+            "bound_dims": len(self.bound_dims),
         }

@@ -20,6 +20,7 @@ from jax._src import core as jcore
 
 from ..symbolic import dim_to_expr
 from ..symbolic.expr import SymbolicExpr
+from .dynamism import BoundIntro, introduces_dim
 from .graph import Graph, Node, Value
 from .loop import LOOP_PARAM, LoopBody, rollable_body
 
@@ -55,6 +56,11 @@ def _try_roll_scan(eqn, *, name: str) -> "LoopBody | None":
     nx = len(eqn.invars) - nc - nk
     bg = graph_from_closed_jaxpr(params["jaxpr"], name=f"{name}.body",
                                  roll_loops=False)
+    if bg.bound_dims:
+        # a value-dependent op inside the body would need a BindDim per
+        # iteration; rolled accounting has no per-step env, so the scan
+        # stays opaque (the padded-to-cap semantics remain correct)
+        return None
     if not rollable_body(bg, nc, nk):
         return None
     return LoopBody(graph=bg, num_consts=nc, num_carry=nk, num_xs=nx,
@@ -65,6 +71,78 @@ def graph_from_closed_jaxpr(closed, *, name: str = "",
                             roll_loops: bool = True) -> Graph:
     g = Graph()
     env: Dict[Any, Value] = {}
+    # bound symbol -> the cap-shaped dim expr it replaced at introduction.
+    # Consumers propagate the refinement forward per dim position (the
+    # SoD² propagate half) so downstream allocations are accounted at the
+    # bound symbol, not the cap.
+    orig_expr_of: Dict[str, SymbolicExpr] = {}
+
+    def _introduce(node: Node) -> None:
+        spec = introduces_dim(node.prim_name)
+        if spec is None:
+            _propagate(node)
+            return
+        pv = node.outvals[spec.padded_out]
+        cap_val = node.invals[spec.cap_arg]
+        if spec.axis >= len(pv.dims) or spec.cap_axis >= len(cap_val.dims):
+            return
+        cap = cap_val.dims[spec.cap_axis]
+        bname = f"__b{len(g.bound_dims)}"
+        orig = tuple(pv.dims)
+        dims = list(orig)
+        dims[spec.axis] = SymbolicExpr.var(bname)
+        pv.dims = tuple(dims)
+        pv._nbytes_expr = None
+        g.bound_dims[bname] = cap
+        g.bound_intros[node.id] = BoundIntro(
+            name=bname, cap=cap, node_id=node.id,
+            padded_out=spec.padded_out, count_out=spec.count_out,
+            axis=spec.axis)
+        orig_expr_of[bname] = orig[spec.axis]
+
+    def _propagate(node: Node) -> None:
+        """Per-dim dataflow refinement of a consumer's cap-shaped output.
+
+        An output dim expression ``e`` rewrites to a bound symbol ``b``
+        iff exactly one refined operand *carries* ``b`` in its dims with
+        ``e`` as the expression it replaced (so the extent provably flows
+        from the bounded operand — elementwise chains, gathers, matmuls
+        whose result dim is the bounded one), and no operand still holds
+        ``e`` unrefined (a full-extent operand — e.g. the rhs of a padded
+        add — forces the output back to the cap, which is sound).
+        Anything ambiguous or synthesized from params stays at the cap.
+        """
+        if not orig_expr_of:
+            return
+        bset = frozenset(g.bound_dims)
+        carried: Dict[SymbolicExpr, set] = {}
+        blocked: set = set()
+        for iv in node.invals:
+            for d in iv.dims:
+                fv = d.free_vars() & bset
+                if fv:
+                    for bname in fv:
+                        carried.setdefault(orig_expr_of[bname],
+                                           set()).add(bname)
+                else:
+                    blocked.add(d)
+        if not carried:
+            return
+        for ov in node.outvals:
+            if not ov.dims:
+                continue
+            dims = list(ov.dims)
+            changed = False
+            for a, e in enumerate(dims):
+                if e.free_vars() & bset or e in blocked:
+                    continue
+                cands = carried.get(e, ())
+                if len(cands) == 1:
+                    dims[a] = SymbolicExpr.var(next(iter(cands)))
+                    changed = True
+            if changed:
+                ov.dims = tuple(dims)
+                ov._nbytes_expr = None
 
     def read(var) -> Value:
         if isinstance(var, jcore.Literal):
@@ -123,7 +201,7 @@ def graph_from_closed_jaxpr(closed, *, name: str = "",
                 outvals.append(val)
                 if not isinstance(ov, jcore.DropVar):
                     write_local(ov, val)
-            g.add_node(eqn.primitive, invals, outvals, eqn.params)
+            _introduce(g.add_node(eqn.primitive, invals, outvals, eqn.params))
 
     def _inline(eqn, read_outer, write_outer):
         pname = eqn.primitive.name

@@ -27,8 +27,8 @@ from ..ir.loop import loop_body_of
 from ..ir.trace import _contains_symbolic
 from ..remat.export import export_regen_programs
 from ..remat.planner import ExecutionPlan
-from .program import (BindArg, Compute, Donate, FreeSlot, Loop, LoopInfo,
-                      MaybeEvict, Program, Regen, Return)
+from .program import (BindArg, BindDim, Compute, Donate, FreeSlot, Loop,
+                      LoopInfo, MaybeEvict, Program, Regen, Return)
 
 
 def lower_plan(plan: ExecutionPlan, *,
@@ -117,17 +117,37 @@ def lower_plan(plan: ExecutionPlan, *,
                                   body_program=body_program, kept=kept))
         else:
             cidx = len(computes)
+            intro = g.bound_intros.get(node.id)
+            defer_regs: Tuple[int, ...] = ()
+            extra_store: Tuple[Tuple[int, int], ...] = ()
+            if intro is not None:
+                # the padded payload's accounting alloc moves to the
+                # BindDim below (its tight size needs the measured count);
+                # the count scalar must reach a register either way
+                defer_regs = tuple(r for oi, r in store
+                                   if oi == intro.padded_out)
+                count_reg = new_reg(node.outvals[intro.count_out])
+                count_kept = any(oi == intro.count_out for oi, _r in store)
+                if not count_kept:
+                    extra_store = ((intro.count_out, count_reg),)
             comp = Compute(cidx=cidx, node=node, prim=node.prim,
                            multi=bool(node.prim is not None
                                       and node.prim.multiple_results),
                            dim_as_value=node.prim_name == "dim_as_value",
                            in_regs=tuple(reg_of[iv.id] for iv in node.invals),
-                           store=store, step=step)
+                           store=store, step=step, defer_regs=defer_regs,
+                           extra_store=extra_store)
             instructions.append(comp)
             computes.append(comp)
             static_params.append(
                 None if _contains_symbolic(node.params) else node.params)
             params_cidx_of[node.id] = cidx
+            if intro is not None:
+                instructions.append(BindDim(
+                    name=intro.name, cap_expr=intro.cap, count_reg=count_reg,
+                    alloc_store=tuple((oi, r) for oi, r in store
+                                      if r in defer_regs),
+                    drop_count=not count_kept, step=step))
 
         # frees, in the interpreter's first-occurrence order
         seen = set()
@@ -168,6 +188,16 @@ def lower_plan(plan: ExecutionPlan, *,
     fast = [inst for inst in instructions
             if inst.op not in (Regen.op, MaybeEvict.op)]
 
+    # bounded dim -> every register whose byte size mentions it; the
+    # BindDim publishing that dim refreshes exactly these sizes
+    bound_dep_regs: Dict[str, Tuple[int, ...]] = {}
+    if g.bound_dims:
+        dep_lists: Dict[str, List[int]] = {name: [] for name in g.bound_dims}
+        for r, expr in enumerate(nbytes_exprs):
+            for name in expr.free_vars() & set(g.bound_dims):
+                dep_lists[name].append(r)
+        bound_dep_regs = {name: tuple(rs) for name, rs in dep_lists.items()}
+
     return Program(plan=plan, graph=g, n_regs=len(vid_of), reg_of=reg_of,
                    vid_of=vid_of, nbytes_exprs=nbytes_exprs,
                    instructions=instructions, fast_instructions=fast,
@@ -176,4 +206,5 @@ def lower_plan(plan: ExecutionPlan, *,
                    candidate_regs=candidate_regs,
                    has_evict_path=has_evict_path,
                    memory_limit=memory_limit, donate_inputs=donate_inputs,
-                   count_inputs=count_inputs, loops=loops)
+                   count_inputs=count_inputs, loops=loops,
+                   bound_dep_regs=bound_dep_regs)

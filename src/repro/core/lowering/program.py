@@ -59,6 +59,7 @@ OP_FREE_SLOT = 4
 OP_DONATE = 5
 OP_RETURN = 6
 OP_LOOP = 7
+OP_BIND_DIM = 8
 
 
 @dataclass(frozen=True)
@@ -85,6 +86,13 @@ class Compute:
     # (consumed later or returned); unkept outputs are simply dropped
     store: Tuple[Tuple[int, int], ...]
     step: int                  # schedule position (victim scoring distance)
+    # value-dependent bounded ops only: registers in ``store`` whose
+    # accounting alloc is deferred to the following BindDim (the padded
+    # payload — its tight size is only known after measuring), and
+    # outputs stored for the BindDim to read but never accounted (the
+    # i32 count scalar when nothing downstream consumes it)
+    defer_regs: Tuple[int, ...] = ()
+    extra_store: Tuple[Tuple[int, int], ...] = ()
     op: int = OP_COMPUTE
 
 
@@ -138,6 +146,29 @@ class Return:
     """Gather the output registers (rematerializing evicted ones)."""
     regs: Tuple[int, ...]
     op: int = OP_RETURN
+
+
+@dataclass(frozen=True)
+class BindDim:
+    """Publish a just-measured bounded dim into the call env (mid-call).
+
+    Emitted immediately after the Compute that *introduces* bounded dim
+    ``name`` (``ir.dynamism``): read the i32 count from ``count_reg``,
+    clamp it to the cap evaluated at the current env (chained introducers
+    can match padding rows, so the raw count may exceed a chained cap),
+    rebind ``name`` in the per-call env, refresh the byte sizes of every
+    bound-dependent register, and only *then* run the deferred accounting
+    alloc of the padded payload (``alloc_store``) — so the arena records
+    the tight size and every later fit/free/peak sees it.  With
+    ``drop_count`` the count scalar's register is nulled after reading
+    (nothing downstream consumes it)."""
+    name: str
+    cap_expr: SymbolicExpr
+    count_reg: int
+    alloc_store: Tuple[Tuple[int, int], ...]   # deferred (out pos, reg)
+    drop_count: bool
+    step: int
+    op: int = OP_BIND_DIM
 
 
 @dataclass(frozen=True)
@@ -262,9 +293,16 @@ class Program:
     # rolled loops (index = Loop.lidx); each body is itself a Program,
     # lowered once — the stream stays O(body), not O(t·body)
     loops: List[LoopInfo] = field(default_factory=list)
+    # bounded dim name -> registers whose byte size mentions it (refreshed
+    # by the BindDim that publishes the measured value)
+    bound_dep_regs: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
 
     def __post_init__(self):
         self._resolve_cache: Dict[Tuple, ResolvedProgram] = {}
+
+    @property
+    def has_bound_dims(self) -> bool:
+        return bool(self.graph.bound_dims)
 
     @property
     def n_instructions(self) -> int:
@@ -275,7 +313,8 @@ class Program:
         names = {OP_BIND_ARG: "BindArg", OP_COMPUTE: "Compute",
                  OP_MAYBE_EVICT: "MaybeEvict", OP_REGEN: "Regen",
                  OP_FREE_SLOT: "FreeSlot", OP_DONATE: "Donate",
-                 OP_RETURN: "Return", OP_LOOP: "Loop"}
+                 OP_RETURN: "Return", OP_LOOP: "Loop",
+                 OP_BIND_DIM: "BindDim"}
         out = {name: 0 for name in names.values()}
         for inst in self.instructions:
             out[names[inst.op]] += 1
@@ -299,6 +338,17 @@ class Program:
             return out
         if len(self._resolve_cache) > 64:
             self._resolve_cache.clear()
+
+        # value-dependent bounded dims absent from the env evaluate at
+        # their cap.  Completion is deterministic in the declared env, so
+        # the declared-env cache key stays sound: cached sizes are cap
+        # sizes, and measured values live only in per-call overlays (the
+        # VM's nbytes_run / the interpreter's fresh evaluations) — two
+        # calls with equal declared dims but different measured bounds
+        # can never alias each other's resolve.
+        if self.graph.bound_dims:
+            from ..ir.dynamism import complete_bound_env
+            env = complete_bound_env(self.graph, env)
 
         sizes: Dict[int, int] = {}
         if size_cache is not None:
@@ -370,8 +420,12 @@ class Program:
                               value_offsets=offsets or {}, loops=rloops)
         out.stats_template, out.peak_bytes = self._replay_stats(
             nbytes, arena, rloops)
-        out.fast_ok = (self.memory_limit is None
-                       or out.peak_bytes <= self.memory_limit)
+        # bound programs measure sizes mid-call, so the precomputed stats
+        # template (cap sizes) is not this call's truth: force the
+        # dynamic path
+        out.fast_ok = ((self.memory_limit is None
+                        or out.peak_bytes <= self.memory_limit)
+                       and not self.graph.bound_dims)
         self._resolve_cache[key] = out
         return out
 
@@ -392,6 +446,13 @@ class Program:
             op = inst.op
             if op == OP_COMPUTE:
                 for _oi, r in inst.store:
+                    if r not in inst.defer_regs:
+                        mm.alloc(vid_of[r], nbytes[r])
+            elif op == OP_BIND_DIM:
+                # the replay has no measurement: the deferred payload
+                # alloc lands at whatever the resolving env said (cap for
+                # a declared env, measured for a report env)
+                for _oi, r in inst.alloc_store:
                     mm.alloc(vid_of[r], nbytes[r])
             elif op == OP_BIND_ARG:
                 if arena is not None:
@@ -420,4 +481,6 @@ class Program:
 
     def stats_for(self, resolved: ResolvedProgram) -> MemoryStats:
         """A fresh per-call copy of the precomputed stats template."""
-        return replace(resolved.stats_template)
+        return replace(resolved.stats_template,
+                       measured_dims=dict(
+                           resolved.stats_template.measured_dims))

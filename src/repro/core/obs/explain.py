@@ -145,6 +145,46 @@ def render_buckets(table) -> List[str]:
     return lines
 
 
+def render_bound_dims(fn, env: Optional[Dict[str, int]] = None) -> List[str]:
+    """Reserved-cap vs measured-size per value-dependent bounded dim.
+
+    Planning reserved every dependent slot at the cap expression; a call
+    measures the actual extent at its BindDim step.  With an ``env`` the
+    cap is evaluated concretely, and — when the env carries a measured
+    value for the dim (e.g. ``RunReport.env`` from a finished call) — the
+    reserved-vs-measured byte ratio per dependent register is shown."""
+    from ..ir.dynamism import complete_bound_env
+
+    g = fn.plan.graph
+    lines: List[str] = []
+    cap_env = None
+    if env is not None:
+        # caps evaluate over base dims only: strip any measured values
+        base = {k: v for k, v in env.items() if k not in g.bound_dims}
+        cap_env = complete_bound_env(g, base)
+    for name, cap in g.bound_dims.items():
+        line = f"{name} <= {cap}"
+        if cap_env is not None:
+            line += f" = {cap_env[name]}"
+            measured = env.get(name)
+            if measured is not None:
+                line += f"  measured {measured}"
+        lines.append(line)
+        prog = fn.program
+        if prog is None or cap_env is None:
+            continue
+        for r in prog.bound_dep_regs.get(name, ()):
+            expr = prog.nbytes_exprs[r]
+            reserved = expr.evaluate(cap_env)
+            slot_line = (f"    %{prog.vid_of[r]:<5} reserved "
+                         f"{_fmt_bytes(reserved)}")
+            if env.get(name) is not None:
+                tight = expr.evaluate({**cap_env, name: env[name]})
+                slot_line += f"  measured {_fmt_bytes(tight)}"
+            lines.append(slot_line)
+    return lines
+
+
 def build_explain(fn, env: Optional[Dict[str, int]] = None) -> str:
     """Assemble the full report for a ``DynamicShapeFunction``."""
     rep = fn.report
@@ -175,6 +215,12 @@ def build_explain(fn, env: Optional[Dict[str, int]] = None) -> str:
     out.append("")
     out.append("-- rematerialization " + "-" * 51)
     out.extend(render_remat(fn.plan))
+
+    bound_dims = fn.plan.graph.bound_dims
+    if bound_dims:
+        out.append("")
+        out.append("-- value-dependent bounded dims " + "-" * 40)
+        out.extend(render_bound_dims(fn, env))
 
     table = fn.specialization_table
     if table is not None:

@@ -33,8 +33,9 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..executor.memory import MemoryManager
-from ..lowering.program import (OP_BIND_ARG, OP_COMPUTE, OP_DONATE,
-                                OP_FREE_SLOT, OP_LOOP, OP_RETURN, Program)
+from ..lowering.program import (OP_BIND_ARG, OP_BIND_DIM, OP_COMPUTE,
+                                OP_DONATE, OP_FREE_SLOT, OP_LOOP, OP_RETURN,
+                                Program)
 from ..memplan.arena import ArenaAllocator
 from ..memplan.liveness import analyze_liveness
 
@@ -66,7 +67,8 @@ class Timeline:
 
 _OP_NAMES = {OP_BIND_ARG: "BindArg", OP_COMPUTE: "Compute",
              OP_FREE_SLOT: "FreeSlot", OP_DONATE: "Donate",
-             OP_LOOP: "Loop", OP_RETURN: "Return"}
+             OP_LOOP: "Loop", OP_RETURN: "Return",
+             OP_BIND_DIM: "BindDim"}
 
 
 class _AuditSink:
@@ -100,8 +102,14 @@ def actual_timeline(program: Program, env: Dict[str, int],
     Pure accounting — no arrays are materialized, so probing the biggest
     declared env costs microseconds.  ``unexplained_out``, when given,
     collects the allocation audit against the plan's liveness intervals
-    (see :func:`diff_timeline`)."""
+    (see :func:`diff_timeline`).
+
+    Value-dependent bounded dims: a replay cannot measure anything, so a
+    bound dim missing from ``env`` is completed to its cap — the curve is
+    the "measured == cap" worst case.  Pass a measured value (e.g. from
+    ``RunReport.env``) to reconstruct a specific call's tight curve."""
     resolved = program.resolve(env)
+    env = resolved.env          # bound dims completed (caps unless given)
     nbytes = resolved.nbytes
     arena = None
     if resolved.arena is not None:
@@ -142,6 +150,12 @@ def actual_timeline(program: Program, env: Dict[str, int],
         if op == OP_COMPUTE:
             step = inst.step
             for _oi, r in inst.store:
+                if r in inst.defer_regs:
+                    continue          # allocated by the following BindDim
+                mm.alloc(vid_of[r], nbytes[r])
+                audit(vid_of[r], nbytes[r], idx, step, "alloc")
+        elif op == OP_BIND_DIM:
+            for _oi, r in inst.alloc_store:
                 mm.alloc(vid_of[r], nbytes[r])
                 audit(vid_of[r], nbytes[r], idx, step, "alloc")
         elif op == OP_BIND_ARG:
@@ -199,6 +213,9 @@ def planned_timeline(program: Program,
     added — the loop plan's own trip-model expression, the same number the
     executors ``ensure()`` before entering the loop."""
     plan = program.plan
+    if program.graph.bound_dims:
+        from ..ir.dynamism import complete_bound_env
+        env = complete_bound_env(program.graph, env)
     ap = plan.arena_plan
     liveness = ap.liveness if ap is not None else analyze_liveness(
         plan.graph, plan.order, donate_inputs=program.donate_inputs)
@@ -269,6 +286,9 @@ class TimelineDiff:
 
 def diff_timeline(program: Program, env: Dict[str, int]) -> TimelineDiff:
     """Build both curves for ``env`` and audit actual against planned."""
+    if program.graph.bound_dims:
+        from ..ir.dynamism import complete_bound_env
+        env = complete_bound_env(program.graph, env)
     unexplained: List[Dict] = []
     actual = actual_timeline(program, env, unexplained_out=unexplained)
     device, arena = planned_timeline(program, env)

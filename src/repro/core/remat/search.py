@@ -286,6 +286,13 @@ class RecomputeSearcher:
                 continue
             if is_loop_node(v.producer):
                 continue  # loop outputs are remat barriers
+            if self.g.bound_dims and \
+                    v.nbytes_expr.free_vars() & set(self.g.bound_dims):
+                # bound-dependent values are remat barriers too: their
+                # tight size exists only in the live call env, and
+                # re-running the introducing op re-measures — the planner
+                # cannot price or replay that statically
+                continue
             p = pos.get(v.producer.id)
             if p is None:
                 continue

@@ -108,6 +108,9 @@ class ShapeGraph:
     def __init__(self) -> None:
         self._subst: Dict[AtomT, SymbolicExpr] = {}
         self._bounds = BoundEnv(default_lo=1)  # dynamic dims come from data
+        # value-dependent bounded symbols: name -> symbolic cap expression
+        # (insertion-ordered; chained caps may reference earlier entries)
+        self._bound_caps: Dict[str, SymbolicExpr] = {}
         # how comparisons were resolved: constant difference, interval
         # separation, or not at all — consumed by benchmarks/symbolic_coverage
         # — plus the memo table's hit/miss counters and the number of
@@ -169,6 +172,33 @@ class ShapeGraph:
     def set_bounds(self, sym: "Atom | str", lo: Optional[int] = None,
                    hi: Optional[int] = None) -> None:
         self.declare_range(sym, lo, hi)
+
+    def declare_bound(self, sym: "Atom | str", cap: ExprLike) -> None:
+        """Declare a value-dependent bounded symbol: ``0 <= sym <= cap``.
+
+        ``cap`` is a symbolic expression over input dims (or earlier
+        bounded symbols).  The symbol's range is derived *through* the
+        cap's interval under the current declared ranges, so
+        ``compare``/``interval_of``/``bounds_of`` answer without any
+        user-declared range for the symbol itself.  Re-declaring (e.g.
+        under a narrowed ``specialized`` graph) only tightens: the upper
+        end meets the previous declaration.  ``lo`` is 0, not the
+        ``BoundEnv`` default of 1 — a measured extent can be empty.
+        """
+        name = sym.name if isinstance(sym, Atom) else str(sym)
+        cap = SymbolicExpr.wrap(cap)
+        self._bound_caps[name] = cap
+        hi = self.interval_of(cap).hi
+        prev = self._bounds.lookup(name)
+        if prev.hi is not None and (hi is None or prev.hi < hi):
+            hi = prev.hi
+        self._bounds.declare(name, Interval(0, hi))
+        self._range_gen[name] = self._range_gen.get(name, 0) + 1
+        self._range_gen_total += 1
+
+    @property
+    def bound_caps(self) -> Mapping[str, SymbolicExpr]:
+        return dict(self._bound_caps)
 
     @property
     def declared_ranges(self) -> Mapping[str, Interval]:
@@ -344,6 +374,14 @@ class ShapeGraph:
                     f"{self._bounds.lookup(name)!r}")
             sub._bounds.declare(name, met)
             if met != prev:
+                narrowed.add(name)
+        # re-derive bounded symbols through their caps under the narrowed
+        # ranges (insertion order: chained caps reference earlier ones).
+        # declare_bound only tightens, so a bound dim whose cap got
+        # narrower joins the ``narrowed`` set for memo-inheritance checks.
+        for name, cap in self._bound_caps.items():
+            sub.declare_bound(name, cap)
+            if sub._bounds.lookup(name) != self._bounds.lookup(name):
                 narrowed.add(name)
         # canonical forms share the substitution map verbatim
         sub._canon_memo = dict(self._canon_memo)

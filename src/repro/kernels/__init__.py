@@ -1,3 +1,5 @@
-from .ops import flash_attention, rmsnorm
+from .ops import (flash_attention, masked_select, nonzero_pad, rmsnorm,
+                  topk_dynamic, unique_bounded)
 
-__all__ = ["flash_attention", "rmsnorm"]
+__all__ = ["flash_attention", "rmsnorm", "nonzero_pad", "masked_select",
+           "topk_dynamic", "unique_bounded"]

@@ -12,7 +12,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from jax.extend.core import Primitive
+
+from repro.core.ir.dynamism import DimIntroSpec, register_introduces_dim
+
 from . import flash_attention as _fa
+from . import ref as _ref
 from . import rmsnorm as _rn
 
 
@@ -39,3 +44,87 @@ def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
     interp = _default_interpret() if interpret is None else interpret
     return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
                        interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# Value-dependent bounded ops (dynamism *introducers*, SoD² taxonomy).
+#
+# Each primitive returns ``(payload, count)``: the payload is padded to
+# its symbolic bound (the input's static/cap shape) with zeros past the
+# valid prefix, and ``count`` is the measured i32 extent.  Registering
+# with ``register_introduces_dim`` makes the tracer rewrite the payload's
+# leading dim to a fresh bounded symbol ``__b<k> <= cap``, which the
+# planner reserves at the cap and the runtime re-binds tight (``BindDim``).
+# The eager impls are the padded-to-bound oracles in ``kernels.ref`` —
+# both executors run the identical impl, keeping the differential
+# contract bitwise.
+# ---------------------------------------------------------------------------
+
+
+def _i32_scalar(_: object = None):
+    from jax.core import ShapedArray
+    return ShapedArray((), jnp.int32)
+
+
+def _bounded_primitive(name: str, impl, abstract_eval,
+                       spec: Optional[DimIntroSpec] = None) -> Primitive:
+    p = Primitive(name)
+    p.multiple_results = True
+    p.def_impl(lambda *xs, **kw: list(impl(*xs, **kw)))
+    p.def_abstract_eval(abstract_eval)
+    register_introduces_dim(name, spec)
+    return p
+
+
+def _abse_like(i):
+    """Payload aval == input ``i``'s aval; plus the i32 count scalar."""
+    def abse(*avals):
+        from jax.core import ShapedArray
+        a = avals[i]
+        return [ShapedArray(a.shape, a.dtype), _i32_scalar()]
+    return abse
+
+
+def _abse_idx(*avals):
+    from jax.core import ShapedArray
+    return [ShapedArray(avals[0].shape, jnp.int32), _i32_scalar()]
+
+
+_nonzero_pad_p = _bounded_primitive(
+    "nonzero_pad", _ref.reference_nonzero_pad, _abse_idx)
+_masked_select_p = _bounded_primitive(
+    "masked_select", _ref.reference_masked_select, _abse_like(0))
+_topk_dynamic_p = _bounded_primitive(
+    "topk_dynamic", _ref.reference_topk_dynamic, _abse_like(0))
+_unique_bounded_p = _bounded_primitive(
+    "unique_bounded", _ref.reference_unique_bounded, _abse_like(0))
+
+
+def nonzero_pad(x):
+    """Indices of nonzero entries of 1-D ``x`` -> ``(idx_padded, count)``.
+
+    ``idx_padded`` is i32 with the same length as ``x``; entries past
+    ``count`` are zero.  Under ``optimize`` the output length becomes a
+    bounded dim ``b <= len(x)``."""
+    a, c = _nonzero_pad_p.bind(x)
+    return a, c
+
+
+def masked_select(x, mask):
+    """Rows of ``x`` (leading axis) where 1-D ``mask`` holds, compacted
+    to the front -> ``(rows_padded, count)``."""
+    a, c = _masked_select_p.bind(x, mask)
+    return a, c
+
+
+def topk_dynamic(x, k):
+    """Largest ``k`` values of 1-D ``x`` with a *data-dependent* ``k``
+    (i32 scalar array), descending -> ``(vals_padded, count)``."""
+    a, c = _topk_dynamic_p.bind(x, k)
+    return a, c
+
+
+def unique_bounded(x):
+    """Sorted distinct values of 1-D ``x`` -> ``(unique_padded, count)``."""
+    a, c = _unique_bounded_p.bind(x)
+    return a, c

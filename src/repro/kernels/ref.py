@@ -32,3 +32,50 @@ def reference_rmsnorm(x: jax.Array, scale: jax.Array,
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
             ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Padded-to-bound oracles for the value-dependent ops (``kernels.ops``):
+# every output keeps the *input's* static shape (the bound), the valid
+# prefix holds the result, the tail is zeros, and an i32 count scalar
+# reports the measured extent.  Pure jnp, fixed shapes — usable both as
+# the eager impl of the primitives and as the allclose ground truth.
+# ---------------------------------------------------------------------------
+
+
+def _keep_prefix(x: jax.Array, count: jax.Array) -> jax.Array:
+    """Zero out rows at index >= count (rows = leading axis)."""
+    n = x.shape[0]
+    keep = jnp.arange(n) < count
+    keep = keep.reshape((n,) + (1,) * (x.ndim - 1))
+    return jnp.where(keep, x, jnp.zeros_like(x))
+
+
+def reference_nonzero_pad(x: jax.Array):
+    """Indices of nonzero entries of 1-D ``x``, zero-padded to len(x)."""
+    n = x.shape[0]
+    nz = x != 0
+    idx = jnp.nonzero(nz, size=n, fill_value=0)[0].astype(jnp.int32)
+    return idx, jnp.sum(nz).astype(jnp.int32)
+
+
+def reference_masked_select(x: jax.Array, mask: jax.Array):
+    """Rows of ``x`` where 1-D ``mask`` holds, compacted to the front."""
+    count = jnp.sum(mask).astype(jnp.int32)
+    perm = jnp.argsort(~mask)          # stable: kept rows keep their order
+    return _keep_prefix(x[perm], count), count
+
+
+def reference_topk_dynamic(x: jax.Array, k: jax.Array):
+    """Largest ``k`` values of 1-D ``x`` (k data-dependent), descending."""
+    count = jnp.clip(k.astype(jnp.int32), 0, x.shape[0])
+    return _keep_prefix(jnp.sort(x)[::-1], count), count
+
+
+def reference_unique_bounded(x: jax.Array):
+    """Sorted distinct values of 1-D ``x``, zero-padded to len(x)."""
+    s = jnp.sort(x)
+    isnew = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), s[1:] != s[:-1]])
+    count = jnp.sum(isnew).astype(jnp.int32)
+    return _keep_prefix(s[jnp.argsort(~isnew)], count), count

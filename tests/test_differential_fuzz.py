@@ -24,6 +24,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import optimize, symbolic_dim
+from repro.kernels import (masked_select, nonzero_pad, topk_dynamic,
+                           unique_bounded)
 
 R = 3          # fixed leading dim of the carry block
 
@@ -177,3 +179,93 @@ def test_plain_dag_vm_vs_interpreter_fuzz(opcodes, d, hi, donate):
     r_stats = _stats(ref)
     _assert_bitwise(v_out, r_out, spec)
     assert v_stats == r_stats, f"stats diverge for {spec}"
+
+
+# -- value-dependent bounded dims ----------------------------------------------
+#
+# Random DAGs mixing the SoD² op classes: *introduce* ops mint a fresh
+# bounded dim whose extent only the input values decide (masked_select /
+# nonzero_pad / topk_dynamic / unique_bounded), *propagate* ops (the
+# elementwise vocabulary) carry it along.  Occupancy is driven through a
+# value threshold so the 0%-fill and 100%-fill edges are exact.  Contract
+# per drawn program, at every probed env:
+#
+#   * ProgramVM ≡ PlanInterpreter bitwise on outputs,
+#   * memory stats identical dict-for-dict (measured_dims included),
+#   * the runtime arena (tight, measured sizes) never exceeds the plan's
+#     ``arena_bound_bytes`` reserve computed from the caps.
+
+# threshold on h > t realizes the drawn occupancy exactly at the edges
+_OCC_THRESHOLD = {0.0: 1e9, 0.5: 0.0, 1.0: -1e9}
+
+
+def _build_bounded_fn(opcodes, occ):
+    t = _OCC_THRESHOLD[occ]
+
+    def f(x, k):
+        h = x
+        total = k * 0
+        for oc in opcodes:
+            if oc == 0:
+                h = jnp.tanh(h)
+            elif oc == 1:
+                h = h * 2.0 + 0.25
+            elif oc == 2:
+                h = h - 0.5 * h * h
+            elif oc == 3:
+                h, c = masked_select(h, h > t)
+                total = total + c
+            elif oc == 4:
+                idx, c = nonzero_pad(h)
+                h = idx.astype(jnp.float32)
+                total = total + c
+            elif oc == 5:
+                h, c = topk_dynamic(h, k)
+                total = total + c
+            else:
+                h, c = unique_bounded(h)
+                total = total + c
+        return jnp.sum(h), total
+
+    return f
+
+
+@settings(max_examples=10, deadline=None)
+@given(opcodes=st.lists(st.integers(0, 6), min_size=1, max_size=5),
+       occ=st.sampled_from([0.0, 0.5, 1.0]),
+       n=st.sampled_from([4, 13, 32]),
+       hi=st.sampled_from([32, 64]))
+def test_value_dependent_bounded_fuzz(opcodes, occ, n, hi):
+    n = min(n, hi)
+    spec = dict(opcodes=opcodes, occ=occ, n=n, hi=hi)
+    f = _build_bounded_fn(opcodes, occ)
+    s = symbolic_dim("s")
+    specs = (jax.ShapeDtypeStruct((s,), jnp.float32),
+             jax.ShapeDtypeStruct((), jnp.int32))
+    vm = optimize(f, *specs, dynamic_dims={"s": (1, hi)}, executor="vm")
+    ref = optimize(f, *specs, dynamic_dims={"s": (1, hi)},
+                   executor="reference")
+
+    n_intro = sum(1 for oc in opcodes if oc >= 3)
+    assert len(vm.plan.graph.bound_dims) == n_intro, spec
+    assert vm.program.counts()["BindDim"] == n_intro, spec
+
+    for env_n in (n, max(1, n // 2)):
+        rng = np.random.RandomState(env_n + sum(opcodes))
+        x = jnp.asarray(rng.randn(env_n), jnp.float32)
+        k = jnp.int32(max(1, env_n // 3))
+        v_out = vm(x, k)
+        v_stats = _stats(vm)
+        r_out = ref(x, k)
+        r_stats = _stats(ref)
+        _assert_bitwise(v_out, r_out, spec)
+        assert v_stats == r_stats, f"stats diverge for {spec}: " + str({
+            kk: (v_stats[kk], r_stats[kk]) for kk in v_stats
+            if v_stats[kk] != r_stats.get(kk)})
+        assert len(v_stats["measured_dims"]) == n_intro, spec
+        # tight runtime accounting must stay under the cap-sized reserve
+        bound = vm.report.arena_bound_bytes
+        if bound is not None:
+            assert v_stats["arena_bytes"] <= bound, (spec, env_n)
+        # oracle: the eager impls compute the exact same padded values
+        _assert_bitwise(v_out, f(x, k), spec)

@@ -300,6 +300,43 @@ class TestTimeline:
             opnames = {p.opname for p in diff.actual.points}
             assert "Loop" in opnames
 
+    def test_bounded_dims_timeline_stays_ok(self):
+        """With value-dependent bounded ops in the graph the plan-vs-actual
+        diff still audits clean: the replay completes missing bound dims to
+        their caps, every allocation is explained by a planned liveness
+        interval, and a measured env (from a real call) reconstructs that
+        call's tight curve — still within the cap-sized reserve."""
+        from repro.kernels import masked_select
+        s = symbolic_dim("s")
+
+        def f(x, mask):
+            y, cnt = masked_select(jnp.tanh(x), mask)
+            return (y * y).sum(), cnt
+
+        fn = optimize(f, jax.ShapeDtypeStruct((s, 4), jnp.float32),
+                      jax.ShapeDtypeStruct((s,), jnp.bool_),
+                      dynamic_dims={"s": (1, 64)})
+        for s_val in (2, 16, 64):
+            diff = fn.memory_timeline({"s": s_val})
+            assert diff.ok, diff.summary()
+            assert diff.unexplained == []
+            assert "BindDim" in {p.opname for p in diff.actual.points}
+        # a real call's measured env replays the tight curve
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.randn(16, 4), jnp.float32)
+        fn(x, jnp.asarray(rng.rand(16) < 0.5))
+        rep = fn.last_report
+        assert rep.stats.measured_dims
+        tight = fn.memory_timeline(rep.env)
+        assert tight.ok, tight.summary()
+        assert tight.actual.peak_device == rep.stats.device_peak
+        cap = fn.memory_timeline({"s": 16})
+        assert tight.actual.peak_device < cap.actual.peak_device
+        # explain() reports reserved-cap vs measured-size per bounded slot
+        text = fn.explain(env=rep.env)
+        assert "value-dependent bounded dims" in text
+        assert "measured" in text and "reserved" in text
+
     def test_bucketed_timeline_uses_resident_bucket(self, bucketed_fn):
         w = np.ones((8, 8), np.float32)
         bucketed_fn(w, np.ones((4, 8), np.float32))

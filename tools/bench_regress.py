@@ -48,6 +48,13 @@ KINDS: Dict[str, Tuple[str, List[Tuple[str, bool]]]] = {
         ("compile_speedup_vs_unrolled", True),
         ("exec_speedup_vs_unrolled", True),
     ]),
+    "bounded": ("BENCH_bounded.json", [
+        # measured-tight device peak / pad-to-bound peak at 50% and 0%
+        # occupancy — pure accounting, deterministic; moves only when
+        # BindDim tightening or the propagation rules change
+        ("tight_over_pad_half", False),
+        ("tight_over_pad_empty", False),
+    ]),
     "obs": ("BENCH_obs.json", [
         # actual arena / guaranteed bound at the shared probe env —
         # deterministic, moves only when the planner or replay changes
