@@ -1,0 +1,183 @@
+"""Kernel-variant selection benchmark: selected vs fixed-default config.
+
+For each bench arch, build an attention + rmsnorm block at the arch's
+real geometry (heads, head_dim, d_model from the smoke config) with
+symbolic ``(b, s)`` and bucketed dispatch split at s=64, then compile it
+twice:
+
+  * **selected** — ``kernel_select=True`` (the default): the cost model
+    scores the variant registry over each bucket's interval bounds and
+    bakes the winner into the bucket's ``Compute`` params (the small
+    bucket crosses over to the reference implementations, the large
+    bucket picks bigger Pallas blocks);
+  * **default** — ``kernel_select=False`` with call-site
+    ``impl="pallas"``: the one fixed Pallas configuration (128-wide
+    blocks) every shape used to run before per-bucket selection.
+
+Per-call wall time is then measured with traffic pinned inside the
+*small* bucket — the non-default bucket where the crossover pays — and
+the large bucket is reported alongside.  Asserted (the subsystem's
+headline contract): on >= 3 of the 4 archs the selected plan beats the
+fixed default per call, and every winning small bucket actually selected
+a non-default variant.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke] [--json F]
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import optimize, symbolic_dims
+from repro.kernels import default_variant, flash_attention, rmsnorm
+
+ARCHS = ["llama2_1b", "gemma_2b", "granite_8b", "musicgen_medium"]
+
+BATCH_RANGE = (1, 16)
+SEQ_RANGE = (1, 2048)
+BUCKET_EDGES = [64]                  # (1,64] small | (64,2048] large
+SMALL_ENV = (4, 32)
+LARGE_ENV = (2, 256)
+MIN_ARCHS_IMPROVED = 3
+
+
+def _geometry(arch: str) -> Dict[str, int]:
+    cfg = get_smoke_config(arch)
+    hq = cfg.n_heads
+    hkv = cfg.n_kv_heads or hq
+    hd = cfg.head_dim or cfg.d_model // hq
+    return dict(hq=hq, hkv=hkv, hd=hd, d=cfg.d_model)
+
+
+def _make_fwd(impl: Optional[str]):
+    def fwd(q, k, v, x, scale):
+        o = flash_attention(q, k, v, causal=True, impl=impl)
+        h = rmsnorm(x, scale, impl=impl)
+        return o, h
+    return fwd
+
+
+def _compile(arch: str, *, selected: bool):
+    geo = _geometry(arch)
+    B, S = symbolic_dims("b, s")
+    specs = (
+        jax.ShapeDtypeStruct((B, geo["hq"], S, geo["hd"]), jnp.float32),
+        jax.ShapeDtypeStruct((B, geo["hkv"], S, geo["hd"]), jnp.float32),
+        jax.ShapeDtypeStruct((B, geo["hkv"], S, geo["hd"]), jnp.float32),
+        jax.ShapeDtypeStruct((B, S, geo["d"]), jnp.float32),
+        jax.ShapeDtypeStruct((geo["d"],), jnp.float32),
+    )
+    fwd = _make_fwd(None if selected else "pallas")
+    return optimize(fwd, *specs,
+                    dynamic_dims={"b": BATCH_RANGE, "s": SEQ_RANGE},
+                    buckets={"s": BUCKET_EDGES},
+                    kernel_select=selected), geo
+
+
+def _args_at(geo: Dict[str, int], b: int, s: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    f = lambda *sh: jnp.asarray(rng.standard_normal(sh, dtype=np.float32))
+    return (f(b, geo["hq"], s, geo["hd"]), f(b, geo["hkv"], s, geo["hd"]),
+            f(b, geo["hkv"], s, geo["hd"]), f(b, s, geo["d"]), f(geo["d"],))
+
+
+def _time_calls(fn, args, *, warmup: int, reps: int) -> float:
+    """Best-of-reps per-call wall seconds (post-warmup, jit caches hot)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bucket_variants(fn, env: Dict[str, int]) -> Dict[str, str]:
+    table = fn.specialization_table
+    bp = table.peek(table.key_of(env))
+    if bp is None or not bp.plan.kernel_selections:
+        return {}
+    return {s.prim_name: s.variant.name
+            for s in bp.plan.kernel_selections.values()}
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    warmup, reps = (2, 5) if smoke else (3, 20)
+    rows: List[Dict] = []
+    for arch in ARCHS:
+        fn_sel, geo = _compile(arch, selected=True)
+        fn_def, _ = _compile(arch, selected=False)
+        row: Dict = dict(arch=arch, **geo)
+        for label, (b, s) in (("small", SMALL_ENV), ("large", LARGE_ENV)):
+            args = _args_at(geo, b, s)
+            t_sel = _time_calls(fn_sel, args, warmup=warmup, reps=reps)
+            t_def = _time_calls(fn_def, args, warmup=warmup, reps=reps)
+            env = {"b": b, "s": s}
+            row[f"{label}_env"] = [b, s]
+            row[f"{label}_selected_us"] = round(t_sel * 1e6, 1)
+            row[f"{label}_default_us"] = round(t_def * 1e6, 1)
+            row[f"{label}_speedup"] = round(t_def / t_sel, 3)
+            row[f"{label}_variants"] = _bucket_variants(fn_sel, env)
+        sel = row["small_variants"]
+        row["non_default"] = any(name != default_variant(prim).name
+                                 for prim, name in sel.items())
+        row["speedup"] = row["small_speedup"]
+        row["smoke"] = smoke
+        rows.append(row)
+
+    improved = [r["arch"] for r in rows if r["small_speedup"] > 1.0]
+    assert len(improved) >= MIN_ARCHS_IMPROVED, (
+        f"selected variants beat the fixed default on only {improved} "
+        f"(need >= {MIN_ARCHS_IMPROVED} of {ARCHS})")
+    for r in rows:
+        if r["small_speedup"] > 1.0:
+            assert any(v.startswith("ref") for v in
+                       r["small_variants"].values()), (
+                f"{r['arch']}: small bucket won without selecting a "
+                f"non-default variant: {r['small_variants']}")
+    return rows
+
+
+def format_rows(rows: List[Dict]) -> str:
+    out = []
+    for r in rows:
+        out.append(f"{r['arch']:18s} hq={r['hq']:3d} hkv={r['hkv']:3d} "
+                   f"hd={r['hd']:4d} d={r['d']:5d}")
+        for label in ("small", "large"):
+            b, s = r[f"{label}_env"]
+            variants = " ".join(f"{k}={v}" for k, v in
+                                sorted(r[f"{label}_variants"].items()))
+            out.append(
+                f"    {label:5s} ({b:2d},{s:4d}): "
+                f"selected={r[f'{label}_selected_us']:9.1f}us "
+                f"default={r[f'{label}_default_us']:9.1f}us "
+                f"speedup={r[f'{label}_speedup']:6.2f}x   {variants}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timing reps (CI); same archs + asserts")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write rows as JSON")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print(format_rows(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

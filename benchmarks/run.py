@@ -30,9 +30,10 @@ def main() -> None:
     steps = 6 if args.fast else 12
 
     from benchmarks import (bounded_bench, compile_bench, dispatch_bench,
-                            exec_bench, loop_bench, memplan_bench, obs_bench,
-                            remat_sweep, roofline, scheduler_micro,
-                            symbolic_coverage, table1_dynamic_training)
+                            exec_bench, kernel_bench, loop_bench,
+                            memplan_bench, obs_bench, remat_sweep, roofline,
+                            scheduler_micro, symbolic_coverage,
+                            table1_dynamic_training)
 
     # paper Table 1: dynamic vs static vs BladeDISC++ training
     rows = _timed(
@@ -150,6 +151,19 @@ def main() -> None:
     with open("BENCH_bounded.json", "w") as f:
         json.dump({"rows": rows}, f, indent=2)
     print(bounded_bench.format_rows(rows), file=sys.stderr)
+
+    # per-bucket kernel-variant selection: selected plan vs the one fixed
+    # Pallas configuration (>=3/4 archs improved on the small bucket +
+    # every winner selected a non-default variant asserted inside)
+    rows = _timed(
+        "kernel", lambda: kernel_bench.run(smoke=args.fast),
+        lambda rs: ";".join(
+            f"{r['arch']}:small{r['small_speedup']:.2f}x"
+            f"/large{r['large_speedup']:.2f}x"
+            for r in rs))
+    with open("BENCH_kernel.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(kernel_bench.format_rows(rows), file=sys.stderr)
 
     # roofline readout from the dry-run artifacts (if present)
     try:

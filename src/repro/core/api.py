@@ -204,6 +204,8 @@ def _compile_pipeline(
     collect: bool = False,
     tracer: Any = NULL_TRACER,
     decisions: Optional[DecisionLog] = None,
+    kernel_select: bool = True,
+    kernel_forced: Optional[Mapping[int, str]] = None,
 ) -> Tuple[ExecutionPlan, OptimizeReport, Optional[PipelineArtifacts]]:
     """schedule → remat → memplan over an already-traced graph.
 
@@ -391,6 +393,24 @@ def _compile_pipeline(
             dl.add("remat-static", f"%{vid}", method,
                    "interval bounds over the declared ranges fix the cheaper "
                    "regeneration method at compile time")
+    if kernel_select:
+        # kernel-variant selection: score every registered variant of every
+        # kernel node over THIS plan's interval bounds — a bucket's narrowed
+        # ranges pick aggressive blocks (or the reference crossover for
+        # small shapes), the whole-range plan keeps whatever stays valid at
+        # its widest corner.  Overrides live on the plan, never on the
+        # shared graph nodes.
+        from repro.kernels.variants import select_kernels
+        with tracer.span("kernel-select") as _kspan:
+            sels = select_kernels(graph, sg, forced=kernel_forced,
+                                  decisions=dl)
+            plan.kernel_selections = sels
+            plan.kernel_overrides = {
+                nid: s.variant.overrides() for nid, s in sels.items()}
+            _kspan.attrs.update(
+                n_kernels=len(sels),
+                n_non_default=sum(1 for s in sels.values()
+                                  if not s.is_default))
     peak_lo = peak_hi = None
     if sg.declared_ranges:  # without ranges the bound is vacuous (hi = None)
         with tracer.span("bounds") as _bsp:
@@ -439,7 +459,10 @@ class DynamicShapeFunction:
                  table_factory: Optional[
                      Callable[[Optional[int]], SpecializationTable]] = None,
                  tracer: Optional[Tracer] = None,
-                 decisions: Optional[DecisionLog] = None):
+                 decisions: Optional[DecisionLog] = None,
+                 kernel_forced: Optional[Dict[Optional[BucketKey],
+                                              Dict[int, str]]] = None,
+                 kernel_remeasure_after: Optional[int] = None):
         self.plan = plan
         self._in_tree = in_tree
         self._out_tree = out_tree
@@ -469,6 +492,15 @@ class DynamicShapeFunction:
         self._table_factory = table_factory
         # bucket key the most recent call dispatched to (None: monolithic)
         self.last_bucket: Optional[BucketKey] = None
+        # kernel measured fallback: per-bucket forced variants (shared with
+        # the bucket compile closure — recompiles read it), the auto-trigger
+        # threshold, per-bucket call counts, and in-flight measure threads
+        self._memory_limit = memory_limit
+        self._kernel_forced = kernel_forced if kernel_forced is not None else {}
+        self._kernel_remeasure_after = kernel_remeasure_after
+        self._kernel_calls: Dict[Optional[BucketKey], int] = {}
+        self._kernel_measured: set = set()
+        self._remeasure_threads: List[threading.Thread] = []
 
     def __call__(self, *args, **kwargs):
         flat, in_tree = tree_util.tree_flatten((args, kwargs))
@@ -508,6 +540,9 @@ class DynamicShapeFunction:
             st.bucket_hits = self._table.hits
             st.specialize_count = self._table.specialize_count
             prog = bp.program
+            if self._kernel_remeasure_after is not None and \
+                    self.last_bucket is not None:
+                self._maybe_remeasure(self.last_bucket, env)
         self.last_report = report
         tel = self._telemetry
         if tel is not None:
@@ -622,7 +657,102 @@ class DynamicShapeFunction:
         nothing in flight."""
         if self._table is None:
             return []
+        for t in list(self._remeasure_threads):
+            t.join(timeout)
+            if not t.is_alive():
+                self._remeasure_threads.remove(t)
         return self._table.drain_background(timeout=timeout)
+
+    # -- kernel-variant measured fallback ---------------------------------------
+    def _maybe_remeasure(self, key: "BucketKey", env: Dict[str, int]) -> None:
+        """Auto-trigger: after ``kernel_remeasure_after`` calls land in a
+        bucket, time the variant candidates at that bucket's traffic shape
+        and re-select — once per bucket.  Runs off-thread on a background
+        table (the compile lock serializes the swap); inline otherwise."""
+        n = self._kernel_calls.get(key, 0) + 1
+        self._kernel_calls[key] = n
+        if key in self._kernel_measured or n < self._kernel_remeasure_after:
+            return
+        if not self.plan.kernel_selections:
+            return
+        self._kernel_measured.add(key)
+        if self._table is not None and self._table.background:
+            t = threading.Thread(
+                target=lambda: self.remeasure_kernels(env),
+                name="kernel-remeasure", daemon=True)
+            self._remeasure_threads.append(t)
+            t.start()
+        else:
+            self.remeasure_kernels(env)
+
+    def remeasure_kernels(self, env: Optional[Mapping[str, int]] = None, *,
+                          repeats: int = 3) -> Dict[int, str]:
+        """Measured fallback for kernel-variant selection.
+
+        Wall-times every VMEM-valid variant of every kernel node at the
+        concrete dim binding ``env`` (default: the most recent call's),
+        forces the per-node winners — restricted to variants that stay
+        valid over the *whole* target range, so the swapped plan keeps the
+        fallback-safety property — and rebuilds the plan: the env's bucket
+        plan under bucketed dispatch (atomically swapped via the table),
+        else the monolithic plan.  Returns node id -> winning variant name;
+        the timings land in the decision log (kind ``kernel-measure``).
+        """
+        from repro.kernels.variants import (measure_variants, node_bounds,
+                                            select_kernels, variant_valid,
+                                            variants_for)
+        if env is None:
+            if self.last_report is None:
+                raise ValueError(
+                    "remeasure_kernels needs an env (no call recorded yet)")
+            env = self.last_report.env
+        env = dict(env)
+        if not self.plan.kernel_selections:
+            return {}
+        key = None
+        sg = self.plan.shape_graph
+        if self._table is not None:
+            key = self._table.key_of(env)
+            sg = sg.specialized(self._table.space.ranges_of(key))
+        graph = self.plan.graph
+        forced: Dict[int, str] = {}
+        for nid, sel in self.plan.kernel_selections.items():
+            node = self.plan.node_by_id[nid]
+            timings = measure_variants(sel.prim_name, node, env,
+                                       repeats=repeats)
+            # the winner must stay valid at the target range's hi corner,
+            # not just at this env — never trade safety for speed
+            hi = {k: h for k, (_lo, h) in node_bounds(node, sg).items()}
+            itemsize = int(node.invals[0].dtype.itemsize)
+            ranked = sorted(timings.items(), key=lambda kv: kv[1])
+            by_name = {v.name: v for v in variants_for(sel.prim_name)}
+            for name, t_s in ranked:
+                if variant_valid(sel.prim_name, by_name[name], hi, itemsize):
+                    forced[nid] = name
+                    break
+            self.decisions.add(
+                "kernel-measure", f"%{nid} {sel.prim_name}",
+                forced.get(nid, sel.variant.name),
+                f"measured best-of-{repeats} at "
+                + " ".join(f"{k}={v}" for k, v in sorted(env.items())),
+                timings_us={k: round(v * 1e6, 1) for k, v in ranked},
+                bucket=key)
+        if self._table is not None:
+            self._kernel_forced[key] = forced
+            self._table.recompile(key)
+        else:
+            sels = select_kernels(graph, sg, forced=forced,
+                                  decisions=self.decisions)
+            self.plan.kernel_selections = sels
+            self.plan.kernel_overrides = {
+                nid: s.variant.overrides() for nid, s in sels.items()}
+            self.interp, self._program = _build_executor(
+                self.plan, self.report, self.executor,
+                memory_limit=self._memory_limit,
+                donate_inputs=self.interp.donate_inputs,
+                count_inputs=self.interp.count_inputs,
+                tracer=self.trace)
+        return forced
 
     @property
     def guaranteed_peak_bytes(self) -> Optional[int]:
@@ -659,7 +789,9 @@ class DynamicShapeFunction:
                                     table=table,
                                     table_factory=self._table_factory,
                                     tracer=self.trace,
-                                    decisions=self.decisions)
+                                    decisions=self.decisions,
+                                    kernel_forced=self._kernel_forced,
+                                    kernel_remeasure_after=self._kernel_remeasure_after)
 
 
 def optimize(
@@ -679,6 +811,8 @@ def optimize(
     max_cached_plans: int = 16,
     background_specialize: bool = False,
     executor: str = "vm",
+    kernel_select: bool = True,
+    kernel_remeasure_after: Optional[int] = None,
     **example_kwargs,
 ) -> DynamicShapeFunction:
     """Trace ``fn`` symbolically and build the optimized dynamic-shape plan.
@@ -715,6 +849,17 @@ def optimize(
     :class:`Program` executed by the register VM — per-call work is one
     cached ``resolve`` plus the instruction stream; ``"reference"`` keeps
     the op-by-op :class:`PlanInterpreter` (differential testing).
+    ``kernel_select``: score the registered kernel-variant tables
+    (:mod:`repro.kernels.variants`) over each plan's interval bounds and
+    bake the cheapest valid configuration — block sizes, pipeline depth,
+    ref-vs-pallas crossover — into the lowered ``Compute`` params;
+    per-bucket plans select per bucket, the whole-range plan keeps a
+    variant valid anywhere in its range.  ``False`` leaves every kernel on
+    its call-site/default configuration.
+    ``kernel_remeasure_after``: measured fallback — after N calls land in
+    a bucket, wall-time the variant candidates at that traffic's shape and
+    atomically swap a re-selected plan if the model mispredicted (see
+    :meth:`DynamicShapeFunction.remeasure_kernels` for the manual form).
     """
     if memory_plan not in ("arena", "none"):
         raise ValueError(
@@ -754,7 +899,12 @@ def optimize(
                  max_subgraph=max_subgraph,
                  guard_env=guard_env,
                  tracer=tracer,
-                 decisions=decisions)
+                 decisions=decisions,
+                 kernel_select=kernel_select)
+    # measured-fallback channel: bucket key -> {node id -> forced variant}.
+    # remeasure_kernels fills it, then a table recompile re-runs the bucket
+    # pipeline, whose selection honors the forced names (None: whole-range)
+    kernel_forced: Dict[Optional[BucketKey], Dict[int, str]] = {}
     # collect the schedule/remat artifacts + their compare-key dependencies
     # so per-bucket specialization can re-run incrementally
     plan, report, artifacts = _compile_pipeline(graph, sg, collect=True,
@@ -785,7 +935,8 @@ def optimize(
                                  background=bg) as sp:
                     sub_sg = sg.specialized(ranges)
                     b_plan, b_report, _ = _compile_pipeline(
-                        graph, sub_sg, parent=artifacts, **knobs)
+                        graph, sub_sg, parent=artifacts,
+                        kernel_forced=kernel_forced.get(key), **knobs)
                     runner, b_program = _build_executor(
                         b_plan, b_report, executor, memory_limit=limit,
                         donate_inputs=donate_inputs,
@@ -826,4 +977,6 @@ def optimize(
         table=table_factory(memory_limit) if table_factory else None,
         table_factory=table_factory,
         tracer=tracer,
-        decisions=decisions)
+        decisions=decisions,
+        kernel_forced=kernel_forced,
+        kernel_remeasure_after=kernel_remeasure_after)

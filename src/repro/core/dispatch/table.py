@@ -273,6 +273,52 @@ class SpecializationTable:
             with self._lock:
                 self._inflight.pop(key, None)
 
+    def recompile(self, key: BucketKey, *, background: bool = False
+                  ) -> Optional[BucketPlan]:
+        """Force one bucket through the pipeline again and swap the result.
+
+        The re-selection half of the kernel measured fallback: the caller
+        updates what ``compile_fn`` will decide (e.g. a forced kernel
+        variant per node), then this rebuilds the bucket's plan and
+        atomically installs it — concurrent dispatch keeps hitting the old
+        plan until the instant of the swap.  ``background=True`` runs the
+        rebuild on the worker (requires a background table) and returns
+        ``None``; synchronous calls return the fresh plan."""
+        if background:
+            if not self.background:
+                raise ValueError(
+                    "recompile(background=True) requires a background table")
+            with self._lock:
+                self._failed.pop(key, None)
+                if key in self._inflight:
+                    return None
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=1, thread_name_prefix="specialize")
+                # bypass _submit_background's residency check: the point
+                # is to replace the resident plan
+                fut = self._pool.submit(self._recompile_and_install, key)
+                self._inflight[key] = fut
+            return None
+        with self._compile_lock:
+            bp = self._compile_fn(key, self.space.ranges_of(key))
+            self._install(key, bp)
+        return bp
+
+    def _recompile_and_install(self, key: BucketKey) -> BucketKey:
+        try:
+            with self._compile_lock:
+                bp = self._compile_fn(key, self.space.ranges_of(key))
+                self._install(key, bp)
+            return key
+        except BaseException as e:
+            with self._lock:
+                self._failed[key] = e
+            raise
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+
     @property
     def n_pending(self) -> int:
         """Background specializations currently in flight."""

@@ -139,7 +139,20 @@ class PlanInterpreter:
                 nbytes[v.id] = b
             return b
 
+        overrides = plan.kernel_overrides
+        local_refined: Dict[int, Dict[str, Any]] = {}
+
         def params_of(node: Node) -> Dict[str, Any]:
+            ov = overrides.get(node.id)
+            if ov is not None:
+                # kernel-variant override: merge per plan, cached per run —
+                # the shared cross-bucket cache keys only (graph uid, env)
+                # and other buckets' plans merge different choices
+                p = local_refined.get(node.id)
+                if p is None:
+                    p = {**refine_params(node.params, env), **ov}
+                    local_refined[node.id] = p
+                return p
             p = refined.get(node.id)
             if p is None:
                 p = refine_params(node.params, env)

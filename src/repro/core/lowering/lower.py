@@ -139,8 +139,14 @@ def lower_plan(plan: ExecutionPlan, *,
                            extra_store=extra_store)
             instructions.append(comp)
             computes.append(comp)
+            # kernel-variant selection bakes its param overrides here, so
+            # the VM hot path replays the chosen configuration with no
+            # shape branch; the shared ``node.params`` stay untouched
+            # (other buckets' plans merge their own choices)
+            ov = plan.kernel_overrides.get(node.id)
+            params = node.params if ov is None else {**node.params, **ov}
             static_params.append(
-                None if _contains_symbolic(node.params) else node.params)
+                None if _contains_symbolic(params) else params)
             params_cidx_of[node.id] = cidx
             if intro is not None:
                 instructions.append(BindDim(

@@ -369,10 +369,18 @@ class Program:
             if len(params_cache) > 64:
                 params_cache.clear()
             refined = params_cache.setdefault(key, {})
+        overrides = self.plan.kernel_overrides if self.plan is not None else {}
         params: List[Dict[str, Any]] = []
         for comp, static in zip(self.computes, self.static_params):
             if static is not None:
                 params.append(static)
+                continue
+            ov = overrides.get(comp.node.id)
+            if ov is not None:
+                # kernel-variant override on symbolic params: resolve
+                # outside the shared cache — other buckets' programs key
+                # the same (graph uid, env) but merge different choices
+                params.append({**refine_params(comp.node.params, env), **ov})
                 continue
             p = refined.get(comp.node.id)
             if p is None:

@@ -131,6 +131,40 @@ def render_remat(plan) -> List[str]:
     return lines
 
 
+def render_kernel_selection(fn) -> List[str]:
+    """Chosen kernel variant per node, per plan (whole-range + buckets).
+
+    Each line shows the variant the cost model baked into that plan's
+    ``Compute`` params, the modeled speedup over the default configuration
+    at the plan's probe corners, and the variants its VMEM footprint ruled
+    out; ``[measured]`` marks a choice re-selected from wall-clock timings
+    (the background measured fallback)."""
+    def _plan_lines(label: str, plan) -> List[str]:
+        ls: List[str] = []
+        for nid, sel in sorted(plan.kernel_selections.items()):
+            tags = []
+            if sel.measured:
+                tags.append("measured")
+            if not sel.is_default:
+                tags.append(f"model x{sel.model_speedup:.2f} vs default")
+            ls.append(
+                f"  {label} %{nid} {sel.prim_name}: {sel.variant.name}  "
+                f"{sel.describe_bounds()}"
+                f"{'  [' + ', '.join(tags) + ']' if tags else ''}")
+            if sel.invalid:
+                ls.append(f"      vmem ruled out: {', '.join(sel.invalid)}")
+        return ls
+
+    lines = _plan_lines("whole-range", fn.plan)
+    table = fn.specialization_table
+    if table is not None:
+        for key in table.compiled_keys:
+            bp = table.peek(key)
+            if bp is not None and bp.plan is not fn.plan:
+                lines.extend(_plan_lines(f"bucket {key}", bp.plan))
+    return lines or ["(no selectable kernels in this graph)"]
+
+
 def render_buckets(table) -> List[str]:
     st = table.stats()
     lines = [f"{table.n_buckets} buckets | hits {st['hits']} | "
@@ -215,6 +249,11 @@ def build_explain(fn, env: Optional[Dict[str, int]] = None) -> str:
     out.append("")
     out.append("-- rematerialization " + "-" * 51)
     out.extend(render_remat(fn.plan))
+
+    if fn.plan.kernel_selections:
+        out.append("")
+        out.append("-- kernel selection " + "-" * 52)
+        out.extend(render_kernel_selection(fn))
 
     bound_dims = fn.plan.graph.bound_dims
     if bound_dims:

@@ -36,6 +36,11 @@ class ExecutionPlan:
     static_methods: Dict[int, str] = field(default_factory=dict)
     # compile-time buffer-reuse plan (None with memory_plan="none")
     arena_plan: Optional["ArenaPlan"] = None
+    # kernel-variant selection (node id -> param overrides / selection
+    # record); baked into lowered Compute params, never into the shared
+    # ``node.params`` — plans for other buckets see their own choices
+    kernel_overrides: Dict[int, Dict[str, object]] = field(default_factory=dict)
+    kernel_selections: Dict[int, object] = field(default_factory=dict)
 
     def __post_init__(self):
         self.node_by_id = {n.id: n for n in self.graph.nodes}

@@ -1,5 +1,10 @@
+from .hw_model import DEFAULT_HW, HardwareModel
 from .ops import (flash_attention, masked_select, nonzero_pad, rmsnorm,
                   topk_dynamic, unique_bounded)
+from .variants import (KernelSelection, KernelVariant, default_variant,
+                       registered_kernels, select_kernels, variants_for)
 
 __all__ = ["flash_attention", "rmsnorm", "nonzero_pad", "masked_select",
-           "topk_dynamic", "unique_bounded"]
+           "topk_dynamic", "unique_bounded", "HardwareModel", "DEFAULT_HW",
+           "KernelVariant", "KernelSelection", "variants_for",
+           "default_variant", "registered_kernels", "select_kernels"]

@@ -1,0 +1,78 @@
+"""The hardware model: one set of machine constants for every consumer.
+
+``benchmarks/roofline.py`` (arch-level roofline terms) and
+``kernels/variants.py`` (the per-kernel analytical cost model) must agree
+on what the machine can do — peak FLOP rate, HBM bandwidth, VMEM
+capacity, MXU/VPU geometry — or a kernel the cost model calls
+compute-bound would look memory-bound in the roofline table.  Both import
+from here; nothing else in the repo hard-codes a TFLOP/s.
+
+The defaults describe a TPU v5e-class chip (the target the Pallas
+kernels are tiled for):
+
+* one MXU of 128x128 ALUs — matmul operands want every contracting /
+  non-contracting tile dimension at (a multiple of) 128;
+* a VPU of (8, 128) lanes for elementwise work;
+* ~16 MiB of VMEM per core, shared by every in-flight block and the
+  pipeline's double buffers — the cost model's *validity* constraint;
+* per-``pallas_call`` launch overhead, the constant that makes the
+  reference implementation win for degenerate shapes.
+
+Values are per chip.  ``HardwareModel`` is a frozen dataclass so a test
+(or a different deployment target) can carry its own instance; module
+attributes ``PEAK_FLOPS`` / ``HBM_BW`` / ``LINK_BW`` keep the names the
+roofline benchmark has always exported.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    """Per-chip machine constants consumed by cost model + roofline."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12       # bf16 MXU FLOP/s
+    vpu_flops: float = 12.3e12       # f32 elementwise FLOP/s (8x128 VPU)
+    hbm_bw: float = 819e9            # HBM bytes/s
+    link_bw: float = 50e9            # ICI bytes/s per link
+    vmem_bytes: int = 16 * 2**20     # usable VMEM per core
+    mxu_dim: int = 128               # systolic array edge
+    vpu_sublanes: int = 8            # VREG is (8, 128)
+    vpu_lanes: int = 128
+    # fixed cost of entering a pallas_call (grid setup, prologue DMAs);
+    # the reference implementation instead pays one fused-XLA dispatch
+    kernel_launch_s: float = 2e-6
+    xla_dispatch_s: float = 5e-7
+    # per-grid-step sequencing overhead (scalar core bookkeeping + DMA
+    # issue between steps that the pipeline cannot fully hide)
+    grid_step_s: float = 5e-9
+
+    def with_vmem(self, vmem_bytes: int) -> "HardwareModel":
+        """The same chip with a different VMEM budget (tests/property
+        checks shrink it to watch the valid variant set contract)."""
+        return replace(self, vmem_bytes=vmem_bytes)
+
+
+DEFAULT_HW = HardwareModel()
+
+# legacy module-level names (roofline's original constants)
+PEAK_FLOPS = DEFAULT_HW.peak_flops
+HBM_BW = DEFAULT_HW.hbm_bw
+LINK_BW = DEFAULT_HW.link_bw
+
+
+def mxu_efficiency(hw: HardwareModel, *tile_dims: int) -> float:
+    """Fraction of MXU peak a matmul with these tile dims can sustain.
+
+    Each dimension below the systolic edge wastes the proportional slice
+    of the array (a 64-wide operand occupies half the 128 columns); full
+    multiples are free.  Dims are clamped to [1, mxu_dim] before the
+    ratio, so 256 is as good as 128 — alignment, not size, is what pays.
+    """
+    eff = 1.0
+    for d in tile_dims:
+        d = max(1, min(int(d), hw.mxu_dim))
+        eff *= d / hw.mxu_dim
+    return max(eff, 1e-6)

@@ -1,13 +1,33 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""Public kernel entry points, registered as first-class primitives.
 
-On a real TPU runtime call these with ``interpret=False`` (the default
-resolves from the backend); this CPU container validates with
-``interpret=True`` which executes the kernel body in Python.
+``flash_attention`` and ``rmsnorm`` used to be plain jit'd wrappers — a
+fixed Pallas configuration fused into whatever jaxpr traced them.  They
+are now JAX primitives, so a traced graph carries one node per kernel
+call and the compiler can *select* a configuration for it: the variant
+registry + cost model in :mod:`repro.kernels.variants` pick block sizes,
+pipeline depth, and the ref-vs-pallas crossover per compiled plan, and
+the choice is baked into the lowered ``Compute`` instruction.
+
+Dispatch rules of the wrappers:
+
+* an explicit ``impl=`` always wins ('pallas' | 'ref');
+* passing any Pallas-specific argument (``block_q``/``block_kv``/
+  ``block_rows``/``interpret``) implies ``impl='pallas'`` — existing
+  call sites keep their exact behavior;
+* otherwise ``impl`` stays ``None`` — *auto*: an eager call resolves it
+  through the cost model at the concrete shape (tiny-d ``rmsnorm`` hits
+  the reference implementation instead of padding d up to 128), while a
+  call under ``repro.optimize`` tracing leaves the sentinel in the node
+  params for plan-time per-bucket selection to overwrite.
+
+On a real TPU runtime ``interpret`` resolves to ``False``; this CPU
+container validates with ``interpret=True`` which executes the kernel
+body in Python.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -19,31 +39,128 @@ from repro.core.ir.dynamism import DimIntroSpec, register_introduces_dim
 from . import flash_attention as _fa
 from . import ref as _ref
 from . import rmsnorm as _rn
+from . import variants as _variants
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("causal", "softmax_scale", "block_q",
-                                   "block_kv", "interpret"))
+# jit'd workers — every knob static so each resolved configuration
+# compiles once and replays from cache
+_fa_pallas = partial(jax.jit, static_argnames=(
+    "causal", "softmax_scale", "block_q", "block_kv", "interpret"))(
+        _fa.flash_attention)
+_fa_ref = partial(jax.jit, static_argnames=("causal", "softmax_scale"))(
+    _ref.reference_attention)
+_rn_pallas = partial(jax.jit, static_argnames=(
+    "eps", "block_rows", "interpret"))(_rn.rmsnorm)
+_rn_ref = partial(jax.jit, static_argnames=("eps",))(_ref.reference_rmsnorm)
+
+
+def _flash_run(q, k, v, *, causal: bool = True,
+               softmax_scale: Optional[float] = None,
+               block_q: Optional[int] = None, block_kv: Optional[int] = None,
+               interpret: Optional[bool] = None, impl: Optional[str] = None,
+               pipeline_depth: int = 2):
+    """Concrete-shape dispatcher behind the flash_attention primitive."""
+    del pipeline_depth  # VMEM-accounting knob only; Pallas double buffers
+    if impl is None:
+        b, hq, s, hd = q.shape
+        t = k.shape[2]
+        chosen = _variants.select_eager(
+            "flash_attention", {"b": b, "hq": hq, "s": s, "t": t, "hd": hd},
+            jnp.dtype(q.dtype).itemsize, {"causal": causal})
+        impl = chosen.impl
+        if impl == "pallas":
+            block_q = block_q or chosen.block_of("block_q", 128)
+            block_kv = block_kv or chosen.block_of("block_kv", 128)
+    if impl == "ref":
+        return _fa_ref(q, k, v, causal=causal, softmax_scale=softmax_scale)
+    interp = _default_interpret() if interpret is None else interpret
+    return _fa_pallas(q, k, v, causal=causal, softmax_scale=softmax_scale,
+                      block_q=block_q or 128, block_kv=block_kv or 128,
+                      interpret=interp)
+
+
+def _rmsnorm_run(x, scale, *, eps: float = 1e-6,
+                 block_rows: Optional[int] = None,
+                 interpret: Optional[bool] = None, impl: Optional[str] = None,
+                 pipeline_depth: int = 2):
+    """Concrete-shape dispatcher behind the rmsnorm primitive."""
+    del pipeline_depth
+    if impl is None:
+        d = x.shape[-1]
+        n = 1
+        for s in x.shape[:-1]:
+            n *= s
+        chosen = _variants.select_eager(
+            "rmsnorm", {"n": n, "d": d}, jnp.dtype(x.dtype).itemsize, {})
+        impl = chosen.impl
+        if impl == "pallas":
+            block_rows = block_rows or chosen.block_of("block_rows", 256)
+    if impl == "ref":
+        return _rn_ref(x, scale, eps=eps)
+    interp = _default_interpret() if interpret is None else interpret
+    return _rn_pallas(x, scale, eps=eps, block_rows=block_rows or 256,
+                      interpret=interp)
+
+
+def _kernel_primitive(name: str, run) -> Primitive:
+    p = Primitive(name)
+    p.def_impl(run)
+
+    def abse(*avals, **params):
+        from jax.core import ShapedArray
+        a = avals[0]
+        return ShapedArray(a.shape, a.dtype)
+
+    p.def_abstract_eval(abse)
+    try:  # usable under an outer jax.jit where available
+        from jax.interpreters import mlir
+        mlir.register_lowering(p, mlir.lower_fun(run, multiple_results=False))
+    except Exception:
+        pass
+    return p
+
+
+_flash_attention_p = _kernel_primitive("flash_attention", _flash_run)
+_rmsnorm_p = _kernel_primitive("rmsnorm", _rmsnorm_run)
+
+
+def run_kernel(prim_name: str, arrays: Sequence[Any],
+               params: Dict[str, Any]):
+    """Invoke a kernel dispatcher directly (the measured-fallback timer)."""
+    if prim_name == "flash_attention":
+        return _flash_run(*arrays, **params)
+    if prim_name == "rmsnorm":
+        return _rmsnorm_run(*arrays, **params)
+    raise KeyError(prim_name)
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     softmax_scale: Optional[float] = None,
-                    block_q: int = 128, block_kv: int = 128,
-                    interpret: Optional[bool] = None):
+                    block_q: Optional[int] = None,
+                    block_kv: Optional[int] = None,
+                    interpret: Optional[bool] = None,
+                    impl: Optional[str] = None):
     """q: (B, Hq, S, hd); k/v: (B, Hkv, T, hd)."""
-    interp = _default_interpret() if interpret is None else interpret
-    return _fa.flash_attention(q, k, v, causal=causal,
-                               softmax_scale=softmax_scale, block_q=block_q,
-                               block_kv=block_kv, interpret=interp)
+    if impl is None and (block_q is not None or block_kv is not None
+                         or interpret is not None):
+        impl = "pallas"
+    return _flash_attention_p.bind(q, k, v, causal=causal,
+                                   softmax_scale=softmax_scale,
+                                   block_q=block_q, block_kv=block_kv,
+                                   interpret=interpret, impl=impl,
+                                   pipeline_depth=2)
 
 
-@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
-def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
-            interpret: Optional[bool] = None):
-    interp = _default_interpret() if interpret is None else interpret
-    return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
-                       interpret=interp)
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: Optional[int] = None,
+            interpret: Optional[bool] = None, impl: Optional[str] = None):
+    if impl is None and (block_rows is not None or interpret is not None):
+        impl = "pallas"
+    return _rmsnorm_p.bind(x, scale, eps=eps, block_rows=block_rows,
+                           interpret=interpret, impl=impl, pipeline_depth=2)
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,13 @@ KINDS: Dict[str, Tuple[str, List[Tuple[str, bool]]]] = {
         ("tight_over_pad_half", False),
         ("tight_over_pad_empty", False),
     ]),
+    "kernel": ("BENCH_kernel.json", [
+        # selected plan / fixed-default plan per-call ratio on the small
+        # bucket — the bucket where the variant crossover pays; the large
+        # bucket sits near parity on interpret-mode hosts, so its ratio
+        # is noise, not a contract
+        ("speedup", True),
+    ]),
     "obs": ("BENCH_obs.json", [
         # actual arena / guaranteed bound at the shared probe env —
         # deterministic, moves only when the planner or replay changes
