@@ -31,7 +31,8 @@ def main() -> None:
 
     from benchmarks import (bounded_bench, compile_bench, dispatch_bench,
                             exec_bench, kernel_bench, loop_bench,
-                            memplan_bench, obs_bench, remat_sweep, roofline,
+                            memplan_bench, obs_bench, remat_sweep,
+                            resilience_bench, roofline,
                             scheduler_micro, symbolic_coverage,
                             table1_dynamic_training)
 
@@ -164,6 +165,19 @@ def main() -> None:
     with open("BENCH_kernel.json", "w") as f:
         json.dump({"rows": rows}, f, indent=2)
     print(kernel_bench.format_rows(rows), file=sys.stderr)
+
+    # fault-tolerant serving: disabled-path <=2% contract (hard-asserted
+    # inside the bench), degraded-call cost, quarantine recovery, and
+    # seeded fault->record accounting
+    rows = _timed(
+        "resilience", lambda: resilience_bench.run(smoke=args.fast),
+        lambda rs: ";".join(
+            f"{r['arch']}:degr{r['degraded_over_healthy']:.2f}x"
+            f"/map{r['faults_mapped_frac']:.2f}"
+            for r in rs))
+    with open("BENCH_resilience.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(resilience_bench.format_rows(rows), file=sys.stderr)
 
     # roofline readout from the dry-run artifacts (if present)
     try:

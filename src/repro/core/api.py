@@ -21,9 +21,10 @@ from __future__ import annotations
 
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, \
-    Sequence, Tuple
+    Sequence, Tuple, Union
 
 import jax
 from jax import export, tree_util
@@ -31,13 +32,19 @@ from jax import export, tree_util
 from .dispatch import BucketKey, BucketPlan, BucketSpace, BucketsSpec, \
     SpecializationTable, build_bucket_space
 from .executor.interpreter import PlanInterpreter, RunReport
+from .executor.memory import MemoryLimitExceeded
 from .executor.vm import ProgramVM
 from .ir.dynamism import complete_bound_env
 from .ir.trace import check_declared_ranges, solve_env, trace_to_graph
 from .lowering import Program, lower_plan
 from .memplan import ArenaPlan, build_arena_plan
+from .memplan.arena import ArenaExhausted
 from .obs import NULL_TRACER, DecisionLog, Telemetry, Tracer
 from .remat.planner import ExecutionPlan, build_plan
+from .resilience import (BucketQuarantined, CircuitBreaker, CompileFault,
+                         FaultPlan, FaultPlanRef, FaultSpec, OffloadFailure,
+                         RegenFailure, RequestFailed, ResilienceConfig,
+                         ResilienceController, TransientKernelError)
 from .scheduling.memsim import simulate_peak, simulate_peak_bound
 from .scheduling.scheduler import ScheduleResult, schedule_graph
 from .symbolic import ShapeGraph, declare_dim_ranges
@@ -47,6 +54,7 @@ __all__ = [
     "symbolic_dim", "symbolic_dims",
     "BucketSpace", "SpecializationTable", "BucketPlan", "build_bucket_space",
     "Program", "ProgramVM", "lower_plan", "scan",
+    "FaultPlan", "FaultSpec", "ResilienceConfig", "RequestFailed",
 ]
 
 _EXECUTORS = ("vm", "reference")
@@ -57,7 +65,7 @@ def _build_executor(plan: ExecutionPlan, report: "OptimizeReport",
                     memory_limit: Optional[int],
                     donate_inputs: bool, count_inputs: bool,
                     size_cache=None, params_cache=None,
-                    tracer=NULL_TRACER):
+                    tracer=NULL_TRACER, arena_hard_cap=None):
     """Lower + wrap ``plan`` for one executor kind.
 
     ``executor="vm"`` lowers the plan to a flat :class:`Program` (the
@@ -74,7 +82,8 @@ def _build_executor(plan: ExecutionPlan, report: "OptimizeReport",
                                  donate_inputs=donate_inputs,
                                  count_inputs=count_inputs,
                                  size_cache=size_cache,
-                                 params_cache=params_cache)
+                                 params_cache=params_cache,
+                                 arena_hard_cap=arena_hard_cap)
         return interp, None
     with tracer.span("lower") as sp:
         program = lower_plan(plan, memory_limit=memory_limit,
@@ -84,7 +93,8 @@ def _build_executor(plan: ExecutionPlan, report: "OptimizeReport",
         sp.attrs["n_instructions"] = program.n_instructions
         sp.attrs["has_evict_path"] = program.has_evict_path
     return ProgramVM(program, size_cache=size_cache,
-                     params_cache=params_cache), program
+                     params_cache=params_cache,
+                     arena_hard_cap=arena_hard_cap), program
 
 
 def symbolic_dim(name: str):
@@ -462,7 +472,9 @@ class DynamicShapeFunction:
                  decisions: Optional[DecisionLog] = None,
                  kernel_forced: Optional[Dict[Optional[BucketKey],
                                               Dict[int, str]]] = None,
-                 kernel_remeasure_after: Optional[int] = None):
+                 kernel_remeasure_after: Optional[int] = None,
+                 resilience_config: Optional[ResilienceConfig] = None,
+                 fault_ref: Optional[FaultPlanRef] = None):
         self.plan = plan
         self._in_tree = in_tree
         self._out_tree = out_tree
@@ -475,6 +487,24 @@ class DynamicShapeFunction:
         self.decisions = decisions if decisions is not None else DecisionLog()
         self._telemetry: Optional[Telemetry] = None
         self._dispatch_ns_total = 0
+        # lifetime counters shared across threads get one lock (the chaos
+        # suite drives a single function from many request threads)
+        self._stats_lock = threading.Lock()
+        # resilience: degradation ladder + fault injection, off by default
+        # (the disabled hot path is one attribute test, like telemetry).
+        # The FaultPlanRef is shared with the bucket-compile closure so
+        # inject_faults() can swap plans after the table factory captured it
+        self._fault_ref = fault_ref if fault_ref is not None else FaultPlanRef()
+        self._resilience_config = resilience_config
+        self._resilience: Optional[ResilienceController] = None
+        if resilience_config is not None:
+            self._resilience = ResilienceController(
+                resilience_config, fault_ref=self._fault_ref,
+                decisions=self.decisions)
+        arena_hard_cap = None
+        if resilience_config is not None \
+                and resilience_config.enforce_arena_bound:
+            arena_hard_cap = report.arena_bound_bytes
         # `interp` is the runner for the monolithic plan: a ProgramVM over
         # the lowered Program (default) or the reference PlanInterpreter.
         # A background table already lowered the identical whole-range plan
@@ -486,8 +516,12 @@ class DynamicShapeFunction:
             self.interp, self._program = _build_executor(
                 plan, report, executor, memory_limit=memory_limit,
                 donate_inputs=donate_inputs, count_inputs=count_inputs,
-                tracer=self.trace)
+                tracer=self.trace, arena_hard_cap=arena_hard_cap)
         self.last_report: Optional[RunReport] = None
+        # arena bound of the plan the most recent call actually executed
+        # (the serving plan's guarantee: a bucket's tight bound on a hit,
+        # the whole-range bound on fallback/monolithic calls)
+        self.last_arena_bound: Optional[int] = None
         self._table = table
         self._table_factory = table_factory
         # bucket key the most recent call dispatched to (None: monolithic)
@@ -507,8 +541,33 @@ class DynamicShapeFunction:
         if in_tree != self._in_tree:
             raise TypeError(
                 f"pytree structure mismatch: traced {self._in_tree}, got {in_tree}")
-        if self._table is None:
-            outs, report = self.interp.run(flat)
+        res = self._resilience
+        if res is not None:
+            outs = self._call_resilient(res, flat)
+        else:
+            outs = self._dispatch(flat)
+        return tree_util.tree_unflatten(self._out_tree, outs)
+
+    def _dispatch(self, flat: List[Any], *, force_fallback: bool = False,
+                  faults=None) -> List[Any]:
+        """Select a plan and execute once (one ladder attempt).
+
+        ``force_fallback=True`` serves the whole-range plan regardless of
+        bucketing — the degradation ladder's remat-heavier retry rung,
+        bitwise-identical to the bucket plans.  ``faults`` is an armed
+        :class:`~repro.core.resilience.CallFaults` probe threaded down to
+        the executor (``None`` keeps every hot loop uninstrumented)."""
+        if self._table is None or force_fallback:
+            if self._table is not None:
+                env = solve_env(self.plan.graph, flat)
+                self._check_declared(env)
+                self.last_bucket = self._table.key_of(env)
+                self.last_arena_bound = self.report.arena_bound_bytes
+                outs, report = self.interp.run(flat, env=env, faults=faults)
+            else:
+                self.last_bucket = None
+                self.last_arena_bound = self.report.arena_bound_bytes
+                outs, report = self.interp.run(flat, faults=faults)
             prog = self._program
         else:
             t0 = time.perf_counter_ns()
@@ -516,6 +575,14 @@ class DynamicShapeFunction:
             self._check_declared(env)
             bp, _hit = self._table.lookup(env)
             dispatch_ns = time.perf_counter_ns() - t0
+            # bp.key is None when a background miss served the whole-range
+            # fallback; re-derive the bucket from this request's own env
+            # (shared table state could have moved under concurrent traffic).
+            # Set before the run so a fault aborting it still leaves the
+            # failing bucket on record for the degradation events.
+            self.last_bucket = bp.key if bp.key is not None \
+                else self._table.key_of(env)
+            self.last_arena_bound = bp.report.arena_bound_bytes
             # env is solved + validated once, here; the interpreter trusts
             # it.  The began/ended bracket tells the background worker a
             # request is mid-flight so compiles defer instead of contending
@@ -523,20 +590,16 @@ class DynamicShapeFunction:
             if self._table.background:
                 self._table.request_began()
                 try:
-                    outs, report = bp.interp.run(flat, env=env)
+                    outs, report = bp.interp.run(flat, env=env, faults=faults)
                 finally:
                     self._table.request_ended()
             else:
-                outs, report = bp.interp.run(flat, env=env)
-            # bp.key is None when a background miss served the whole-range
-            # fallback; re-derive the bucket from this request's own env
-            # (shared table state could have moved under concurrent traffic)
-            self.last_bucket = bp.key if bp.key is not None \
-                else self._table.key_of(env)
+                outs, report = bp.interp.run(flat, env=env, faults=faults)
             st = report.stats
             st.last_dispatch_ns = dispatch_ns
-            self._dispatch_ns_total += dispatch_ns
-            st.dispatch_ns_total = self._dispatch_ns_total
+            with self._stats_lock:
+                self._dispatch_ns_total += dispatch_ns
+                st.dispatch_ns_total = self._dispatch_ns_total
             st.bucket_hits = self._table.hits
             st.specialize_count = self._table.specialize_count
             prog = bp.program
@@ -547,7 +610,74 @@ class DynamicShapeFunction:
         tel = self._telemetry
         if tel is not None:
             self._record_call(tel, report, prog)
-        return tree_util.tree_unflatten(self._out_tree, outs)
+        return outs
+
+    def _call_resilient(self, res: ResilienceController,
+                        flat: List[Any]) -> List[Any]:
+        """Degradation-ladder dispatch (resilience enabled).
+
+        Rungs, in order: the plain dispatch (whose executor already runs
+        eviction under memory pressure before anything escapes), a
+        bounded same-plan retry for transient faults, a retry on the
+        remat-heavier whole-range fallback plan for memory pressure and
+        quarantined/failed bucket compiles (bitwise-identical results),
+        and finally a structured :class:`RequestFailed`.  Every step is
+        recorded as a :class:`~repro.core.resilience.DegradationEvent`
+        on the controller, the decision log, and Prometheus counters.
+        Malformed requests reject immediately — client errors never
+        retry."""
+        seq = res.begin_call()
+        fp = res.fault_plan
+        armed = fp.arm_call(seq) if fp is not None else None
+        if armed is not None and armed.take_malformed():
+            res.note_degraded_call()
+            ev = res.record("reject-malformed", seq=seq, attempt=0,
+                            cause="malformed-env")
+            raise RequestFailed(
+                f"call {seq}: malformed request rejected before dispatch",
+                attempts=0, events=(ev,))
+        pol = res.config.retry
+        events: List[Any] = []
+        attempt = 0
+        force_fb = False
+        degraded = False
+        while True:
+            try:
+                return self._dispatch(flat, force_fallback=force_fb,
+                                      faults=armed)
+            except (TransientKernelError, RegenFailure,
+                    OffloadFailure) as e:
+                err, rung, fb_next = e, "retry-transient", force_fb
+            except (MemoryLimitExceeded, ArenaExhausted) as e:
+                err, rung, fb_next = e, "retry-fallback", True
+            except (CompileFault, BucketQuarantined) as e:
+                err, rung, fb_next = e, "retry-fallback", True
+            if not degraded:
+                degraded = True
+                res.note_degraded_call()
+            if attempt >= pol.max_retries:
+                events.append(res.record("reject", seq=seq, attempt=attempt,
+                                         cause=err, bucket=self.last_bucket))
+                try:
+                    env = solve_env(self.plan.graph, flat)
+                except Exception:
+                    env = None
+                raise RequestFailed(
+                    f"call {seq} failed after {attempt + 1} attempt(s): "
+                    f"{err!r}", env=env, bucket=self.last_bucket,
+                    attempts=attempt + 1, cause=err,
+                    events=tuple(events)) from err
+            backoff = pol.backoff_s(attempt)
+            events.append(res.record(rung, seq=seq, attempt=attempt,
+                                     cause=err, backoff_s=backoff,
+                                     bucket=self.last_bucket))
+            if backoff > 0:
+                res.sleep(backoff)
+            force_fb = fb_next
+            attempt += 1
+            # re-arm per attempt: specs spent on this attempt no longer
+            # match, which is what lets a bounded retry actually recover
+            armed = fp.arm_call(seq) if fp is not None else None
 
     def _record_call(self, tel: Telemetry, report: RunReport,
                      program: Optional[Program]) -> None:
@@ -615,6 +745,52 @@ class DynamicShapeFunction:
     @property
     def telemetry(self) -> Optional[Telemetry]:
         return self._telemetry
+
+    # -- resilience --------------------------------------------------------------
+    @property
+    def resilience(self) -> Optional[ResilienceController]:
+        """The attached resilience controller (``None`` when disabled)."""
+        return self._resilience
+
+    def enable_resilience(self, config: Optional[ResilienceConfig] = None
+                          ) -> ResilienceController:
+        """Attach the degradation ladder (see :class:`ResilienceConfig`).
+
+        Calls then route through ``_call_resilient``: runtime failures
+        walk retry-transient → retry-fallback → structured
+        :class:`RequestFailed` instead of escaping raw.  Returns the live
+        controller (counters, recent events); detach with
+        :meth:`disable_resilience` — the hot path reverts to the single
+        disabled check immediately."""
+        self._resilience = ResilienceController(
+            config, fault_ref=self._fault_ref, decisions=self.decisions)
+        self._resilience_config = self._resilience.config
+        return self._resilience
+
+    def disable_resilience(self) -> Optional[ResilienceController]:
+        """Detach and return the controller (``None`` if off)."""
+        res, self._resilience = self._resilience, None
+        return res
+
+    @contextmanager
+    def inject_faults(self, plan: FaultPlan):
+        """Install a :class:`FaultPlan` for the duration of the block.
+
+        Enables a default-config resilience controller if none is
+        attached (and detaches it again on exit); the previously
+        installed plan is restored either way.  Yields the active
+        controller so the block can read counters/events directly."""
+        prev_plan = self._fault_ref.plan
+        attached = self._resilience is None
+        if attached:
+            self.enable_resilience()
+        self._fault_ref.plan = plan
+        try:
+            yield self._resilience
+        finally:
+            self._fault_ref.plan = prev_plan
+            if attached:
+                self._resilience = None
 
     @property
     def program(self) -> Optional[Program]:
@@ -751,7 +927,8 @@ class DynamicShapeFunction:
                 memory_limit=self._memory_limit,
                 donate_inputs=self.interp.donate_inputs,
                 count_inputs=self.interp.count_inputs,
-                tracer=self.trace)
+                tracer=self.trace,
+                arena_hard_cap=getattr(self.interp, "arena_hard_cap", None))
         return forced
 
     @property
@@ -791,7 +968,9 @@ class DynamicShapeFunction:
                                     tracer=self.trace,
                                     decisions=self.decisions,
                                     kernel_forced=self._kernel_forced,
-                                    kernel_remeasure_after=self._kernel_remeasure_after)
+                                    kernel_remeasure_after=self._kernel_remeasure_after,
+                                    resilience_config=self._resilience_config,
+                                    fault_ref=self._fault_ref)
 
 
 def optimize(
@@ -813,6 +992,8 @@ def optimize(
     executor: str = "vm",
     kernel_select: bool = True,
     kernel_remeasure_after: Optional[int] = None,
+    resilience: Union[ResilienceConfig, bool, None] = None,
+    fault_plan: Optional[FaultPlan] = None,
     **example_kwargs,
 ) -> DynamicShapeFunction:
     """Trace ``fn`` symbolically and build the optimized dynamic-shape plan.
@@ -860,6 +1041,19 @@ def optimize(
     a bucket, wall-time the variant candidates at that traffic's shape and
     atomically swap a re-selected plan if the model mispredicted (see
     :meth:`DynamicShapeFunction.remeasure_kernels` for the manual form).
+    ``resilience``: attach the fault-tolerant call path — ``True`` for
+    the default :class:`ResilienceConfig`, or a config instance.  Runtime
+    failures then walk the degradation ladder (same-plan retry for
+    transient faults, whole-range-fallback retry for memory pressure and
+    quarantined buckets, structured :class:`RequestFailed` when retries
+    exhaust) instead of escaping raw; bucket-compile failures quarantine
+    behind a circuit breaker with exponential backoff while the fallback
+    keeps serving.  ``None``/``False`` keeps the zero-overhead direct
+    path (one attribute test per call).
+    ``fault_plan``: install a deterministic
+    :class:`~repro.core.resilience.FaultPlan` (chaos testing); implies
+    ``resilience=True`` when ``resilience`` is unset.  Swap plans later
+    with :meth:`DynamicShapeFunction.inject_faults`.
     """
     if memory_plan not in ("arena", "none"):
         raise ValueError(
@@ -871,6 +1065,15 @@ def optimize(
     if executor not in _EXECUTORS:
         raise ValueError(
             f"executor must be one of {_EXECUTORS}, got {executor!r}")
+    if isinstance(resilience, ResilienceConfig):
+        r_cfg: Optional[ResilienceConfig] = resilience
+    elif resilience:
+        r_cfg = ResilienceConfig()
+    elif resilience is None and fault_plan is not None:
+        r_cfg = ResilienceConfig()   # a fault plan implies the ladder
+    else:
+        r_cfg = None
+    fault_ref = FaultPlanRef(fault_plan)
     tracer = Tracer()
     decisions = DecisionLog()
     with tracer.span("trace") as _tsp:
@@ -924,9 +1127,22 @@ def optimize(
         size_cache: Dict[Tuple, Dict[int, int]] = {}
         params_cache: Dict[Tuple, Dict[int, Dict[str, Any]]] = {}
 
+        def _hard_cap(rep: OptimizeReport) -> Optional[int]:
+            """Per-plan enforced cap under resilience.enforce_arena_bound:
+            each executor is held to *its own* plan's guarantee."""
+            if r_cfg is not None and r_cfg.enforce_arena_bound:
+                return rep.arena_bound_bytes
+            return None
+
         def table_factory(limit: Optional[int],
                           _space=space) -> SpecializationTable:
             def compile_bucket(key, ranges) -> BucketPlan:
+                # chaos hook: an installed fault plan may schedule this
+                # bucket's specialization to fail or hang (the breaker
+                # quarantines it; the fallback keeps serving)
+                fpl = fault_ref.plan
+                if fpl is not None:
+                    fpl.check_compile(key)
                 # a background-worker compile shows up as its own root span
                 # (the tracer's span stack is thread-local) tagged here, so
                 # traces distinguish swap-in compiles from blocking ones
@@ -942,7 +1158,7 @@ def optimize(
                         donate_inputs=donate_inputs,
                         count_inputs=count_inputs,
                         size_cache=size_cache, params_cache=params_cache,
-                        tracer=tracer)
+                        tracer=tracer, arena_hard_cap=_hard_cap(b_report))
                     sp.attrs.update(
                         reused_parent_schedule=b_report.reused_parent_schedule,
                         reused_parent_postpass=b_report.reused_parent_postpass,
@@ -956,14 +1172,18 @@ def optimize(
                     plan, report, executor, memory_limit=limit,
                     donate_inputs=donate_inputs, count_inputs=count_inputs,
                     size_cache=size_cache, params_cache=params_cache,
-                    tracer=tracer)
+                    tracer=tracer, arena_hard_cap=_hard_cap(report))
                 fallback = BucketPlan(key=None, ranges=dict(sg.declared_ranges),
                                       plan=plan, report=report,
                                       interp=f_runner, program=f_program)
-            return SpecializationTable(_space, compile_bucket,
-                                       max_live=max_cached_plans,
-                                       background=background_specialize,
-                                       fallback=fallback)
+            return SpecializationTable(
+                _space, compile_bucket,
+                max_live=max_cached_plans,
+                background=background_specialize,
+                fallback=fallback,
+                breaker=CircuitBreaker(r_cfg.breaker if r_cfg else None),
+                compile_timeout_s=(r_cfg.compile_timeout_s
+                                   if r_cfg else None))
 
     flat, in_tree = tree_util.tree_flatten((example_args, example_kwargs))
     out_shapes = jax.eval_shape(fn, *example_args, **example_kwargs)
@@ -979,4 +1199,6 @@ def optimize(
         tracer=tracer,
         decisions=decisions,
         kernel_forced=kernel_forced,
-        kernel_remeasure_after=kernel_remeasure_after)
+        kernel_remeasure_after=kernel_remeasure_after,
+        resilience_config=r_cfg,
+        fault_ref=fault_ref)

@@ -24,6 +24,20 @@ duplicates), and ``drain_background`` blocks until every in-flight
 specialization lands — after it returns, ``specialize_count`` matches
 what synchronous compilation would have produced.
 
+Specialization failures are **quarantined**, not fatal: every compile —
+sync, background, or recompile — runs under a per-bucket
+:class:`~repro.core.resilience.quarantine.CircuitBreaker`.  A failure
+(or a compile exceeding ``compile_timeout_s``) opens the breaker for an
+exponentially-backed-off window during which the bucket is not
+recompiled; in background mode the whole-range fallback keeps serving
+its traffic with bitwise-identical results, while synchronous touches
+raise :class:`BucketQuarantined`.  When the window elapses, the next
+miss becomes a single half-open probe compile — success swaps the
+specialized plan in and closes the breaker, failure re-opens it with
+the backoff doubled.  A transiently-faulty bucket therefore heals on
+its own; a deterministically-broken one degrades to the fallback
+instead of crashing the serve loop or burning a core on retries.
+
 The table also answers ``arena_bound_bytes(key)`` — the bucket plan's
 guaranteed worst-case arena size over the bucket's sub-ranges — which the
 serving path uses for admission control by bucket (see
@@ -42,6 +56,8 @@ from dataclasses import dataclass
 from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Tuple)
 
+from ..resilience.faults import CompileTimeout
+from ..resilience.quarantine import BucketQuarantined, CircuitBreaker
 from ..symbolic.intervals import Interval
 from .buckets import BucketSpace
 
@@ -109,7 +125,9 @@ class SpecializationTable:
                                       BucketPlan],
                  *, max_live: int = 16,
                  background: bool = False,
-                 fallback: Optional[BucketPlan] = None):
+                 fallback: Optional[BucketPlan] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 compile_timeout_s: Optional[float] = None):
         if max_live < 1:
             raise ValueError(f"max_live must be >= 1, got {max_live}")
         if background and fallback is None:
@@ -140,10 +158,16 @@ class SpecializationTable:
         self._compile_lock = threading.Lock()  # serializes pipeline runs
         self._pool: Optional[ThreadPoolExecutor] = None
         self._inflight: Dict[BucketKey, Future] = {}
-        # buckets whose background compile raised: not resubmitted (the
-        # fallback keeps serving their traffic), surfaced on the next
-        # synchronous touch — get()/warmup()/drain_background()
-        self._failed: Dict[BucketKey, BaseException] = {}
+        # buckets whose compile raised (or timed out) are *quarantined*
+        # behind a circuit breaker rather than failed forever: the breaker
+        # opens on failure, the fallback keeps serving the bucket's
+        # traffic, and after an exponentially-backed-off interval a single
+        # half-open probe recompiles.  A transient compile fault (OOM on
+        # the compile host, an injected chaos fault) therefore heals; a
+        # deterministic pipeline bug re-opens on every probe without
+        # burning a core in a retry loop.
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.compile_timeout_s = compile_timeout_s
         # requests currently executing (see request_began/request_ended):
         # the background worker defers compiles while this is nonzero
         self._serving = 0
@@ -178,18 +202,17 @@ class SpecializationTable:
         """Plan for a bucket key, compiling if needed (no hit/miss stats).
 
         Synchronous even on a background table: an in-flight background
-        compile is awaited rather than duplicated."""
+        compile is awaited rather than duplicated.  A quarantined bucket
+        (breaker open after a compile failure) raises
+        :class:`BucketQuarantined` instead of compiling."""
         with self._lock:
             bp = self._plans.get(key)
             if bp is not None:
                 self._plans.move_to_end(key)
                 return bp
-            failed = self._failed.get(key)
-            if failed is not None:
-                raise failed
             fut = self._inflight.get(key)
         if fut is not None:
-            fut.result()                  # propagate compile errors
+            fut.result()                  # join; failures live on the breaker
             with self._lock:
                 bp = self._plans.get(key)
             if bp is not None:
@@ -202,15 +225,46 @@ class SpecializationTable:
             return self._plans.get(key)
 
     def _specialize(self, key: BucketKey) -> BucketPlan:
+        if not self.breaker.allow(key):
+            raise BucketQuarantined(key, self.breaker.cause(key),
+                                    self.breaker.retry_in_s(key))
         with self._compile_lock:
             with self._lock:              # a racer may have installed it
                 bp = self._plans.get(key)
             if bp is not None:
+                # the probe ticket (if any) resolves in the racer's favor
+                self.breaker.record_success(key)
                 return bp
-            bp = self._compile_fn(key, self.space.ranges_of(key))
+            bp = self._timed_compile(key)
             # install before releasing the compile lock: a background
             # worker acquiring it next must see the bucket as resident
             self._install(key, bp)
+        self.breaker.record_success(key)
+        return bp
+
+    def _timed_compile(self, key: BucketKey) -> BucketPlan:
+        """One pipeline run under the breaker's watch.
+
+        Exceptions and over-budget compiles record a failure on the
+        breaker (tripping quarantine) and re-raise; a timed-out plan is
+        discarded even though it finished — a compile that blows its
+        budget signals a bucket whose pipeline cost is pathological, and
+        serving its plan would hide that.  The caller records success
+        only after the plan is installed."""
+        t0 = time.monotonic()
+        try:
+            bp = self._compile_fn(key, self.space.ranges_of(key))
+        except Exception as e:
+            self.breaker.record_failure(key, e)
+            raise
+        elapsed = time.monotonic() - t0
+        if self.compile_timeout_s is not None \
+                and elapsed > self.compile_timeout_s:
+            exc = CompileTimeout(
+                f"bucket {key} specialization took {elapsed:.3f}s, over "
+                f"the {self.compile_timeout_s}s budget; plan discarded")
+            self.breaker.record_failure(key, exc)
+            raise exc
         return bp
 
     def _install(self, key: BucketKey, bp: BucketPlan) -> None:
@@ -227,10 +281,14 @@ class SpecializationTable:
     # -- background specialization ---------------------------------------------
     def _submit_background(self, key: BucketKey) -> None:
         """Schedule one compile for ``key`` unless resident, in flight, or
-        already failed (a deterministic pipeline error would otherwise be
-        retried forever, burning a core while serving degrades silently).
-        Caller holds ``self._lock``."""
-        if key in self._plans or key in self._inflight or key in self._failed:
+        quarantined.  The breaker gate is what turns every miss into a
+        free re-probe opportunity: while open it answers ``False`` (the
+        fallback keeps serving), and once the backoff elapses the next
+        miss through here becomes the half-open probe compile.  Caller
+        holds ``self._lock``."""
+        if key in self._plans or key in self._inflight:
+            return
+        if not self.breaker.allow(key):
             return
         if self._pool is None:
             self._pool = ThreadPoolExecutor(
@@ -247,7 +305,7 @@ class SpecializationTable:
         with self._lock:
             self._serving -= 1
 
-    def _compile_and_install(self, key: BucketKey) -> BucketKey:
+    def _compile_and_install(self, key: BucketKey) -> Optional[BucketKey]:
         try:
             # defer (bounded) until no request is mid-execution, so the
             # Python-heavy pipeline never steals the GIL from a serve
@@ -262,13 +320,16 @@ class SpecializationTable:
                 with self._lock:
                     resident = key in self._plans
                 if not resident:
-                    bp = self._compile_fn(key, self.space.ranges_of(key))
+                    bp = self._timed_compile(key)
                     self._install(key, bp)
+            self.breaker.record_success(key)
             return key
-        except BaseException as e:
-            with self._lock:
-                self._failed[key] = e
-            raise
+        except Exception:
+            # already recorded on the breaker by _timed_compile: the
+            # bucket is quarantined and the fallback keeps serving it.
+            # Swallow so the worker thread survives and joiners
+            # (drain_background, get) see a clean future.
+            return None
         finally:
             with self._lock:
                 self._inflight.pop(key, None)
@@ -289,7 +350,6 @@ class SpecializationTable:
                 raise ValueError(
                     "recompile(background=True) requires a background table")
             with self._lock:
-                self._failed.pop(key, None)
                 if key in self._inflight:
                     return None
                 if self._pool is None:
@@ -301,20 +361,22 @@ class SpecializationTable:
                 self._inflight[key] = fut
             return None
         with self._compile_lock:
-            bp = self._compile_fn(key, self.space.ranges_of(key))
+            bp = self._timed_compile(key)
             self._install(key, bp)
+        self.breaker.record_success(key)
         return bp
 
-    def _recompile_and_install(self, key: BucketKey) -> BucketKey:
+    def _recompile_and_install(self, key: BucketKey) -> Optional[BucketKey]:
         try:
             with self._compile_lock:
-                bp = self._compile_fn(key, self.space.ranges_of(key))
+                bp = self._timed_compile(key)
                 self._install(key, bp)
+            self.breaker.record_success(key)
             return key
-        except BaseException as e:
-            with self._lock:
-                self._failed[key] = e
-            raise
+        except Exception:
+            # recorded on the breaker by _timed_compile; keep the worker
+            # alive and the future clean (see _compile_and_install)
+            return None
         finally:
             with self._lock:
                 self._inflight.pop(key, None)
@@ -330,11 +392,13 @@ class SpecializationTable:
         lands (compiles submitted by traffic arriving mid-drain belong to
         the next drain, so the call is bounded under sustained misses).
 
-        Returns the drained bucket keys (first-submitted order) and
-        re-raises the first worker exception, if any.  ``timeout`` is one
-        global deadline for the whole drain.  After a clean drain the
-        table state is indistinguishable from having compiled those
-        buckets synchronously."""
+        Returns the drained bucket keys (first-submitted order).
+        Compile failures do not raise here: a failed compile quarantines
+        its bucket on the breaker (see :meth:`quarantined`) while the
+        fallback keeps serving — the drain is a join, not a health check.
+        ``timeout`` is one global deadline for the whole drain.  After a
+        clean drain the table state is indistinguishable from having
+        compiled those buckets synchronously."""
         with self._lock:
             snapshot = dict(self._inflight)
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -347,12 +411,12 @@ class SpecializationTable:
                     f"background specialization of bucket {key} still "
                     f"pending after {timeout}s (drained so far: {drained})")
             drained.append(key)
-            fut.result()                  # surface fresh compile errors
-        with self._lock:
-            stale = next(iter(self._failed.values()), None)
-        if stale is not None:
-            raise stale                   # surface earlier failures
+            fut.result()                  # join; failures live on the breaker
         return drained
+
+    def quarantined(self) -> List[BucketKey]:
+        """Buckets currently quarantined (breaker open or half-open)."""
+        return self.breaker.quarantined_keys()
 
     # -- warmup & introspection ------------------------------------------------
     def warmup(self, envs: Iterable[Mapping[str, int]]) -> List[BucketKey]:
@@ -416,7 +480,8 @@ class SpecializationTable:
                     "resident": len(self._plans),
                     "fallback_serves": self.fallback_serves,
                     "background_pending": len(self._inflight),
-                    "background_failed": len(self._failed)}
+                    "background_failed":
+                        len(self.breaker.quarantined_keys())}
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"SpecializationTable({self.space!r}, "

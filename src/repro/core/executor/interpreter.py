@@ -60,10 +60,13 @@ class PlanInterpreter:
                  count_inputs: bool = True,
                  size_cache: Optional[Dict[Tuple, Dict[int, int]]] = None,
                  params_cache: Optional[
-                     Dict[Tuple, Dict[int, Dict[str, Any]]]] = None):
+                     Dict[Tuple, Dict[int, Dict[str, Any]]]] = None,
+                 arena_hard_cap: Optional[int] = None):
         self.plan = plan
         self.g = plan.graph
         self.memory_limit = memory_limit
+        # resilience.enforce_arena_bound (see ProgramVM.arena_hard_cap)
+        self.arena_hard_cap = arena_hard_cap
         self.donate_inputs = donate_inputs
         self.count_inputs = count_inputs
         self._output_ids = {v.id for v in self.g.outputs}
@@ -94,7 +97,8 @@ class PlanInterpreter:
 
     # ---------------------------------------------------------------- run --
     def run(self, flat_args: Sequence[Any],
-            env: Optional[Dict[str, int]] = None) -> Tuple[List[Any], RunReport]:
+            env: Optional[Dict[str, int]] = None,
+            faults: Any = None) -> Tuple[List[Any], RunReport]:
         t0 = time.perf_counter()
         g, plan = self.g, self.plan
         if env is None:
@@ -126,8 +130,11 @@ class PlanInterpreter:
             # symbolic slot sizes evaluate + carve once per env (cached
             # inside the plan, like the size/params caches above)
             arena = ArenaAllocator(plan.arena_plan,
-                                   plan.arena_plan.resolve(env))
+                                   plan.arena_plan.resolve(env),
+                                   hard_cap=self.arena_hard_cap)
         mm = MemoryManager(self.memory_limit, arena=arena)
+        if faults is not None:
+            mm.fault_hook = faults.on_memory
 
         def bytes_of(v: Value) -> int:
             if v.id in bound_dep:
@@ -292,6 +299,8 @@ class PlanInterpreter:
             step_holder["i"] = i
             pinned_holder["s"] = frozenset(
                 [iv.id for iv in node.invals] + [ov.id for ov in node.outvals])
+            if faults is not None:
+                faults.before_compute()
             ins = [materialize(iv) for iv in node.invals]
             body = loop_body_of(node)
             if body is not None:

@@ -71,6 +71,11 @@ class MemoryManager:
         # optional ArenaAllocator mirroring device residency through the
         # planned slots (every device alloc/free below notifies it)
         self.arena = arena
+        # fault injection (resilience): called as hook(event, vid, nbytes)
+        # before alloc / evict_to_host / reload / restore mutate state, so
+        # an injected failure aborts the call with accounting consistent.
+        # None (the default) costs one attribute test per event.
+        self.fault_hook: Optional[Callable[[str, int, int], None]] = None
 
     def _arena_alloc(self, vid: int, nbytes: int) -> None:
         if self.arena is not None:
@@ -107,6 +112,8 @@ class MemoryManager:
                 f"limit {self.limit} and eviction could not free enough")
 
     def alloc(self, vid: int, nbytes: int) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook("alloc", vid, nbytes)
         assert vid not in self._device, f"double alloc of value {vid}"
         self._device[vid] = nbytes
         self.stats.device_used += nbytes
@@ -124,6 +131,8 @@ class MemoryManager:
 
     # -- eviction paths -------------------------------------------------------
     def evict_to_host(self, vid: int) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook("offload", vid, self._device.get(vid, 0))
         b = self._device.pop(vid)
         self.stats.device_used -= b
         self._host[vid] = b
@@ -143,6 +152,8 @@ class MemoryManager:
         self.arena_release(vid)
 
     def reload(self, vid: int) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook("reload", vid, self._host.get(vid, 0))
         b = self._host.pop(vid)
         self.stats.host_used -= b
         self._device[vid] = b
@@ -153,6 +164,8 @@ class MemoryManager:
 
     def restore(self, vid: int, nbytes: int) -> None:
         """Re-allocation after recompute regeneration."""
+        if self.fault_hook is not None:
+            self.fault_hook("restore", vid, nbytes)
         self._device[vid] = nbytes
         self.stats.device_used += nbytes
         self.stats.device_peak = max(self.stats.device_peak, self.stats.device_used)

@@ -33,7 +33,7 @@ from ..lowering.program import (OP_BIND_ARG, OP_BIND_DIM, OP_COMPUTE,
                                 OP_DONATE, OP_FREE_SLOT, OP_LOOP,
                                 OP_MAYBE_EVICT, OP_REGEN, Program,
                                 ResolvedProgram)
-from ..memplan.arena import ArenaAllocator
+from ..memplan.arena import ArenaAllocator, ArenaExhausted
 from ..remat.runtime import RuntimeRematPolicy
 from .interpreter import RunReport
 from .memory import MemoryManager, MemoryStats
@@ -45,13 +45,18 @@ class ProgramVM:
     def __init__(self, program: Program, *,
                  size_cache: Optional[Dict[Tuple, Dict[int, int]]] = None,
                  params_cache: Optional[
-                     Dict[Tuple, Dict[int, Dict[str, Any]]]] = None):
+                     Dict[Tuple, Dict[int, Dict[str, Any]]]] = None,
+                 arena_hard_cap: Optional[int] = None):
         self.program = program
         self.plan = program.plan
         # shared per-env caches (bucketed dispatch passes one pair to every
         # bucket executor; keys are namespaced by graph uid inside resolve)
         self._size_cache = size_cache
         self._params_cache = params_cache
+        # resilience.enforce_arena_bound: the plan's guaranteed arena bound
+        # as a runtime hard cap — a resolve (or runtime growth) that would
+        # exceed it raises ArenaExhausted instead of silently growing
+        self.arena_hard_cap = arena_hard_cap
         # optional live-occupancy probe, dynamic (eviction) stream only:
         # called as hook(idx, inst, mm) after every executed instruction.
         # The fast stream is never instrumented — its occupancy curve is
@@ -73,7 +78,8 @@ class ProgramVM:
 
     # ---------------------------------------------------------------- run --
     def run(self, flat_args: Sequence[Any],
-            env: Optional[Dict[str, int]] = None) -> Tuple[List[Any], RunReport]:
+            env: Optional[Dict[str, int]] = None,
+            faults: Any = None) -> Tuple[List[Any], RunReport]:
         t0 = time.perf_counter()
         prog = self.program
         if env is None:
@@ -81,10 +87,27 @@ class ProgramVM:
             env = solve_checked_env(prog.graph, prog.plan.shape_graph,
                                     flat_args)
         resolved = prog.resolve(env, self._size_cache, self._params_cache)
-        if resolved.fast_ok:
-            outs, stats = self._run_fast(flat_args, resolved)
+        cap = self.arena_hard_cap
+        if cap is not None and resolved.arena is not None \
+                and resolved.arena.arena_bytes > cap:
+            # the resolve replay is exact for this env: catching the breach
+            # here covers the fast stream without instrumenting its loop
+            raise ArenaExhausted(
+                f"resolved arena reserve {resolved.arena.arena_bytes} "
+                f"exceeds the enforced bound of {cap} bytes")
+        if faults is None:
+            if resolved.fast_ok:
+                outs, stats = self._run_fast(flat_args, resolved)
+            else:
+                outs, stats = self._run_dynamic(flat_args, resolved, env)
+        elif resolved.fast_ok and not faults.needs_memory:
+            outs, stats = self._run_fast_faulted(flat_args, resolved, faults)
         else:
-            outs, stats = self._run_dynamic(flat_args, resolved, env)
+            # a memory-kind fault needs the allocation stream: the dynamic
+            # regime runs the full instruction list (bitwise-identical
+            # outputs — it is the generic path the fast stream specializes)
+            outs, stats = self._run_dynamic(flat_args, resolved, env,
+                                            faults=faults)
         if stats.measured_dims:
             # surface the measured (not cap) bound dims in the report env
             env = {**resolved.env, **stats.measured_dims}
@@ -190,10 +213,55 @@ class ProgramVM:
         outputs = [storage[r] for r in prog.out_regs]
         return outputs, prog.stats_for(resolved)
 
+    # -------------------------------------------------- fast path, faulted
+    def _run_fast_faulted(self, flat_args: Sequence[Any],
+                          resolved: ResolvedProgram,
+                          faults: Any) -> Tuple[List[Any], MemoryStats]:
+        """``_run_fast`` with a fault probe ahead of every kernel bind.
+
+        A separate loop so the clean fast stream stays branch-free: the
+        zero-overhead contract is on ``_run_fast``, this copy only runs
+        when a kernel fault is armed for the call."""
+        prog = self.program
+        storage: List[Any] = [None] * prog.n_regs
+        params = resolved.params
+        for inst in prog.fast_instructions:
+            op = inst.op
+            if op == OP_COMPUTE:
+                faults.before_compute()
+                ins = [storage[r] for r in inst.in_regs]
+                if inst.dim_as_value:
+                    out = jnp.asarray(params[inst.cidx]["dim"], jnp.int32)
+                    for _oi, r in inst.store:
+                        storage[r] = out
+                elif inst.multi:
+                    outs = inst.prim.bind(*ins, **params[inst.cidx])
+                    for oi, r in inst.store:
+                        storage[r] = outs[oi]
+                else:
+                    out = inst.prim.bind(*ins, **params[inst.cidx])
+                    for _oi, r in inst.store:
+                        storage[r] = out
+            elif op == OP_BIND_ARG:
+                storage[inst.reg] = (flat_args[inst.index]
+                                     if inst.index >= 0 else inst.const)
+            elif op == OP_FREE_SLOT or op == OP_DONATE:
+                storage[inst.reg] = None
+            elif op == OP_LOOP:
+                faults.before_compute()   # a rolled loop counts as one step
+                outs = self._exec_loop(
+                    prog.loops[inst.lidx], resolved.loops[inst.lidx],
+                    [storage[r] for r in inst.in_regs], resolved.env)
+                for oi, r in inst.store:
+                    storage[r] = outs[oi]
+        outputs = [storage[r] for r in prog.out_regs]
+        return outputs, prog.stats_for(resolved)
+
     # --------------------------------------------------------- dynamic path
     def _run_dynamic(self, flat_args: Sequence[Any],
                      resolved: ResolvedProgram,
-                     env: Dict[str, int]) -> Tuple[List[Any], MemoryStats]:
+                     env: Dict[str, int],
+                     faults: Any = None) -> Tuple[List[Any], MemoryStats]:
         prog = self.program
         plan = prog.plan
         vid_of = prog.vid_of
@@ -219,8 +287,11 @@ class ProgramVM:
         policy = RuntimeRematPolicy(plan, resolved.env)
         arena = None
         if resolved.arena is not None:
-            arena = ArenaAllocator(plan.arena_plan, resolved.arena)
+            arena = ArenaAllocator(plan.arena_plan, resolved.arena,
+                                   hard_cap=self.arena_hard_cap)
         mm = MemoryManager(prog.memory_limit, arena=arena)
+        if faults is not None:
+            mm.fault_hook = faults.on_memory
 
         storage: List[Any] = [None] * prog.n_regs
         host_storage: Dict[int, Any] = {}     # reg -> host (numpy) array
@@ -336,6 +407,8 @@ class ProgramVM:
         for idx, inst in enumerate(prog.instructions):
             op = inst.op
             if op == OP_COMPUTE:
+                if faults is not None:
+                    faults.before_compute()
                 ins = [storage[r] if storage[r] is not None else materialize(r)
                        for r in inst.in_regs]
                 p = params[inst.cidx]
@@ -412,6 +485,8 @@ class ProgramVM:
                 # MemoryManager while execution runs the body sub-Program
                 state["step"] = inst.step
                 state["pinned"] = inst.pinned
+                if faults is not None:
+                    faults.before_compute()   # one step per rolled loop
                 ins = [storage[r] if storage[r] is not None else materialize(r)
                        for r in inst.in_regs]
                 rl = resolved.loops[inst.lidx]

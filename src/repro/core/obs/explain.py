@@ -165,6 +165,47 @@ def render_kernel_selection(fn) -> List[str]:
     return lines or ["(no selectable kernels in this graph)"]
 
 
+def render_resilience(fn) -> List[str]:
+    """Ladder config, failure counters, recent degradation events, and
+    breaker (quarantine) state — shown only when resilience is enabled."""
+    res = fn.resilience
+    lines: List[str] = []
+    pol = res.config.retry
+    lines.append(
+        f"ladder: evict (in-call) -> retry-transient -> retry-fallback "
+        f"-> reject | max_retries={pol.max_retries} "
+        f"backoff={pol.backoff_base_s}s x{pol.backoff_factor}")
+    c = res.counters()
+    lines.append(
+        f"calls {c['calls']} | degraded {c['degraded_calls']} | "
+        f"retries transient {c['retries_transient']} / fallback "
+        f"{c['retries_fallback']} | failures {c['failures']} "
+        f"(malformed {c['malformed']})")
+    events = list(res.events)
+    for ev in events[-8:]:
+        lines.append(
+            f"  call {ev.seq} attempt {ev.attempt}: {ev.rung}"
+            f"{' bucket ' + str(ev.bucket) if ev.bucket else ''}"
+            f"{f' backoff {ev.backoff_s:.3f}s' if ev.backoff_s else ''}"
+            f" — {ev.cause}")
+    if len(events) > 8:
+        lines.append(f"  ... {len(events) - 8} earlier events "
+                     f"(fn.resilience.events)")
+    table = fn.specialization_table
+    if table is not None:
+        q = table.quarantined()
+        if q:
+            for key in q:
+                lines.append(
+                    f"  quarantined bucket {key}: "
+                    f"{table.breaker.state(key)}, re-probe in "
+                    f"{table.breaker.retry_in_s(key):.3f}s "
+                    f"({table.breaker.cause(key)!r})")
+        else:
+            lines.append("  no buckets quarantined")
+    return lines
+
+
 def render_buckets(table) -> List[str]:
     st = table.stats()
     lines = [f"{table.n_buckets} buckets | hits {st['hits']} | "
@@ -266,6 +307,11 @@ def build_explain(fn, env: Optional[Dict[str, int]] = None) -> str:
         out.append("")
         out.append("-- bucket dispatch " + "-" * 53)
         out.extend(render_buckets(table))
+
+    if getattr(fn, "resilience", None) is not None:
+        out.append("")
+        out.append("-- resilience " + "-" * 58)
+        out.extend(render_resilience(fn))
 
     if env is not None and fn.program is not None:
         out.append("")

@@ -134,6 +134,28 @@ def prometheus_text(fn=None, batcher=None, prefix: str = "repro") -> str:
             _metric(lines, f"{prefix}_dispatch_ns_total", "counter",
                     "Cumulative bucket-dispatch overhead in nanoseconds.",
                     [(None, tel.dispatch_ns_total)])
+        res = getattr(fn, "resilience", None)
+        if res is not None:
+            rc = res.counters()
+            _metric(lines, f"{prefix}_degraded_calls_total", "counter",
+                    "Calls that walked at least one degradation rung.",
+                    [(None, rc["degraded_calls"])])
+            _metric(lines, f"{prefix}_retries_total", "counter",
+                    "Degradation-ladder retries by rung.",
+                    [({"rung": "transient"}, rc["retries_transient"]),
+                     ({"rung": "fallback"}, rc["retries_fallback"])])
+            _metric(lines, f"{prefix}_request_failures_total", "counter",
+                    "Requests rejected after exhausting the ladder.",
+                    [(None, rc["failures"])])
+            _metric(lines, f"{prefix}_malformed_requests_total", "counter",
+                    "Requests rejected as malformed (never retried).",
+                    [(None, rc["malformed"])])
+        table = fn.specialization_table
+        if table is not None:
+            bs = table.breaker.stats()["by_state"]
+            _metric(lines, f"{prefix}_quarantined_buckets", "gauge",
+                    "Buckets currently quarantined by the compile breaker.",
+                    [(None, bs.get("open", 0) + bs.get("half-open", 0))])
 
     if batcher is not None:
         _metric(lines, f"{prefix}_batcher_pending", "gauge",
@@ -148,4 +170,11 @@ def prometheus_text(fn=None, batcher=None, prefix: str = "repro") -> str:
                     "counter", "Admission-control holds per bucket.",
                     [({"bucket": _key_label(k)}, v)
                      for k, v in held_by.items()])
+        shed_by = getattr(batcher, "shed_by_outcome", None)
+        if shed_by is not None:
+            _metric(lines, f"{prefix}_batcher_shed_total", "counter",
+                    "Requests shed by the batcher, by reason.",
+                    [({"outcome": k}, v)
+                     for k, v in sorted(shed_by.items())] or
+                    [(None, 0)])
     return "\n".join(lines) + "\n"

@@ -7,13 +7,14 @@ dict probe — and stays within 2% of the uninstrumented baseline on the
 exec_bench dispatch-chain microbench.  With telemetry *enabled*, each
 call appends one :class:`CallRecord` to a fixed-capacity ring.
 
-The ring is deliberately single-writer lock-free: ``DynamicShapeFunction``
-serializes calls per instance (the dispatch path is not re-entrant), so a
-monotonically increasing write index into a preallocated slot list needs
-no CAS.  Readers (`records()`) snapshot by index without blocking the
-writer; a torn read can only surface a *complete* older record, never a
-partial one, because slots are replaced wholesale (tuple assignment is
-atomic under the GIL).
+The ring takes one mutex per push: a serving deployment drives a single
+``DynamicShapeFunction`` from many request threads (see the chaos suite),
+so the write index must move atomically or concurrent pushes overwrite
+one slot and double-count another.  The lock lives on the *enabled* path
+only — the disabled path never reaches it — and is uncontended in
+single-threaded use.  Readers (``records()``) snapshot under the same
+lock; slots are replaced wholesale, so a reader can never observe a
+partial record.
 
 Per-instruction memory timelines are *not* sampled by instrumenting the
 VM fast stream — that would put a branch in the hottest loop.  Because
@@ -47,7 +48,7 @@ class CallRecord(NamedTuple):
 
 
 class TelemetryRing:
-    """Fixed-capacity single-writer ring of :class:`CallRecord`."""
+    """Fixed-capacity ring of :class:`CallRecord` (thread-safe)."""
 
     def __init__(self, capacity: int = 256):
         if capacity < 1:
@@ -55,10 +56,12 @@ class TelemetryRing:
         self.capacity = capacity
         self._slots: List[Optional[CallRecord]] = [None] * capacity
         self._count = 0                 # monotonic; next write position
+        self._lock = threading.Lock()
 
     def push(self, rec: CallRecord) -> None:
-        self._slots[self._count % self.capacity] = rec
-        self._count += 1
+        with self._lock:
+            self._slots[self._count % self.capacity] = rec
+            self._count += 1
 
     def __len__(self) -> int:
         return min(self._count, self.capacity)
@@ -74,29 +77,39 @@ class TelemetryRing:
 
     def records(self) -> List[CallRecord]:
         """Oldest-to-newest snapshot of the retained records."""
-        n, cap = self._count, self.capacity
-        if n <= cap:
-            return [r for r in self._slots[:n] if r is not None]
-        start = n % cap
-        out = self._slots[start:] + self._slots[:start]
-        return [r for r in out if r is not None]
+        with self._lock:
+            n, cap = self._count, self.capacity
+            if n <= cap:
+                return [r for r in self._slots[:n] if r is not None]
+            start = n % cap
+            out = self._slots[start:] + self._slots[:start]
+            return [r for r in out if r is not None]
 
 
 @dataclass(frozen=True)
 class AdmissionEvent:
-    """One admission-control hold: a bucket group the batcher refused to
-    drain because its arena bound exceeded the memory budget."""
+    """One admission-control decision by the serving batcher.
+
+    ``outcome`` distinguishes what happened to the group/request:
+    ``"held"`` (over-budget group deferred to a later drain),
+    ``"shed-capacity"`` (queue full, request refused at submit),
+    ``"shed-deadline"`` (request's deadline expired in queue),
+    ``"shed-aged"`` (held group exceeded its max hold cycles)."""
 
     key: Tuple                          # bucket key (dim upper bounds)
     label: str                          # human-readable bucket label
     required_bytes: int                 # the group's arena_bound_bytes
     available_bytes: int                # the batcher's memory_budget
     queue_depth: int                    # requests held in this group
+    outcome: str = "held"               # held | shed-capacity |
+    #                                     shed-deadline | shed-aged
 
 
 class Telemetry:
     """Per-function telemetry aggregate: ring + running totals + sampled
-    timelines.  Created by ``DynamicShapeFunction.enable_telemetry()``."""
+    timelines.  Created by ``DynamicShapeFunction.enable_telemetry()``.
+    Counter updates are lock-protected — concurrent request threads must
+    not lose increments (the lock is on the enabled path only)."""
 
     def __init__(self, capacity: int = 256, sample_timeline_every: int = 0,
                  max_timelines: int = 8):
@@ -109,6 +122,7 @@ class Telemetry:
         self.calls_by_bucket: Dict[Optional[Tuple], int] = {}
         # (seq, timeline) pairs, newest kept; see .timeline.actual_timeline
         self.timelines: List[Tuple[int, Any]] = []
+        self._lock = threading.Lock()
 
     def on_call(self, bucket_key: Optional[Tuple], report: Any, *,
                 program: Any = None,
@@ -116,12 +130,13 @@ class Telemetry:
         """Record one dispatched call.  Runs only when telemetry is
         enabled — the disabled path never reaches this method."""
         st = report.stats
-        seq = self.n_calls
-        self.n_calls += 1
-        self.wall_s_total += report.wall_s
-        self.dispatch_ns_total += st.last_dispatch_ns
-        self.calls_by_bucket[bucket_key] = \
-            self.calls_by_bucket.get(bucket_key, 0) + 1
+        with self._lock:
+            seq = self.n_calls
+            self.n_calls += 1
+            self.wall_s_total += report.wall_s
+            self.dispatch_ns_total += st.last_dispatch_ns
+            self.calls_by_bucket[bucket_key] = \
+                self.calls_by_bucket.get(bucket_key, 0) + 1
         self.ring.push(CallRecord(
             seq=seq, bucket_key=bucket_key,
             env=tuple(sorted(report.env.items())),

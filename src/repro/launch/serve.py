@@ -69,35 +69,129 @@ class BucketBatcher:
     queued (the bound is a *guarantee* — any request in the bucket fits
     under it), so the server can run small-shape traffic while deferring
     heavy buckets to a bigger worker or an off-peak window.
+
+    Serve hardening (every knob defaults *off*, preserving the plain
+    grouping behavior):
+
+    * ``max_queue`` bounds the total queue; a full queue applies
+      ``shed_policy`` — ``"reject-new"`` raises a structured
+      :class:`~repro.core.resilience.RequestRejected` at submit,
+      ``"drop-oldest"`` evicts the oldest queued request instead.
+    * ``default_deadline_s`` / ``submit(..., deadline_s=)`` attach a
+      deadline; requests still queued when it expires are shed at the
+      next drain (``shed-deadline``) instead of dispatching stale.
+    * ``max_hold_cycles`` ages out over-budget groups: a group held more
+      than this many drains is shed whole (``shed-aged``) rather than
+      re-enqueued forever — the unbounded-requeue gap this closes.
+      ``hold_backoff_s`` (doubled by ``hold_backoff_factor`` per
+      consecutive hold, per bucket) keeps a held group quietly queued
+      between re-checks instead of re-probing the bound every drain.
+
+    Every shed is recorded: ``shed_count`` / ``shed_by_outcome``
+    counters, an :class:`AdmissionEvent` with the matching ``outcome``,
+    and the shed requests themselves retrievable via :meth:`take_shed`
+    so a serve loop can answer those clients.
     """
 
-    def __init__(self, fn, *, memory_budget: Optional[int] = None):
+    def __init__(self, fn, *, memory_budget: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject-new",
+                 max_hold_cycles: Optional[int] = None,
+                 hold_backoff_s: float = 0.0,
+                 hold_backoff_factor: float = 2.0,
+                 default_deadline_s: Optional[float] = None,
+                 clock=time.monotonic):
         table = getattr(fn, "specialization_table", None)
         if table is None:
             raise ValueError(
                 "BucketBatcher requires a bucketed function — build it with "
                 "optimize(..., dynamic_dims=..., buckets=...)")
+        if shed_policy not in ("reject-new", "drop-oldest"):
+            raise ValueError(
+                f"shed_policy must be 'reject-new' or 'drop-oldest', "
+                f"got {shed_policy!r}")
         self.fn = fn
         self.table = table
         self.memory_budget = memory_budget
-        # bucket key -> queued (env, payload), FIFO within a bucket
-        self._queue: "OrderedDict[Tuple[int, ...], List[Tuple[Dict[str, int], Any]]]" = OrderedDict()
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.max_hold_cycles = max_hold_cycles
+        self.hold_backoff_s = hold_backoff_s
+        self.hold_backoff_factor = hold_backoff_factor
+        self.default_deadline_s = default_deadline_s
+        self._clock = clock
+        # bucket key -> queued (env, payload, deadline_t), FIFO per bucket
+        self._queue: "OrderedDict[Tuple[int, ...], List[Tuple[Dict[str, int], Any, Optional[float]]]]" = OrderedDict()
         # admission-control observability: cumulative hold count, per-bucket
         # breakdown, and the most recent structured events (bounded — a
         # perpetually-held bucket must not grow memory drain after drain)
         self.held_count = 0
         self.held_by_key: Dict[Tuple[int, ...], int] = {}
         self.admission_events: "deque[AdmissionEvent]" = deque(maxlen=256)
+        # shed accounting: counters by outcome + the shed requests
+        # themselves (bounded), retrievable once via take_shed()
+        self.shed_count = 0
+        self.shed_by_outcome: Dict[str, int] = {}
+        self._shed: "deque[Tuple[Tuple[int, ...], Dict[str, int], Any, str]]" = deque(maxlen=256)
+        # per-bucket hold aging: key -> [consecutive holds, next check t]
+        self._hold_state: Dict[Tuple[int, ...], List[float]] = {}
 
-    def submit(self, env: Mapping[str, int], payload: Any = None) -> Tuple[int, ...]:
+    def _record_shed(self, key: Tuple[int, ...], reqs, outcome: str,
+                     *, required: int = 0, available: int = 0) -> None:
+        self.shed_count += len(reqs)
+        self.shed_by_outcome[outcome] = \
+            self.shed_by_outcome.get(outcome, 0) + len(reqs)
+        self.admission_events.append(AdmissionEvent(
+            key=key, label=self.table.space.describe(key),
+            required_bytes=required, available_bytes=available,
+            queue_depth=len(reqs), outcome=outcome))
+        for env, payload, _dl in reqs:
+            self._shed.append((key, env, payload, outcome))
+
+    def _drop_oldest(self) -> None:
+        """Evict the oldest queued request (the first request of the
+        first-queued bucket) to make room for a new one."""
+        for key in self._queue:
+            reqs = self._queue[key]
+            self._record_shed(key, reqs[:1], "shed-capacity")
+            del reqs[0]
+            if not reqs:
+                del self._queue[key]
+            return
+
+    def submit(self, env: Mapping[str, int], payload: Any = None, *,
+               deadline_s: Optional[float] = None) -> Tuple[int, ...]:
         """Queue one request; returns the bucket key it grouped under.
 
         An env outside the declared ranges raises here — at intake, where
         the client error belongs — rather than mid-drain after the group
         was admitted under a bucket bound the request does not satisfy.
+        With ``max_queue`` set, a full queue sheds per ``shed_policy``:
+        ``reject-new`` raises :class:`RequestRejected` (structured — the
+        caller answers the client), ``drop-oldest`` evicts silently into
+        :meth:`take_shed`.  ``deadline_s`` (default
+        ``default_deadline_s``) bounds how long the request may wait.
         """
         key = self.table.key_of(env)
-        self._queue.setdefault(key, []).append((dict(env), payload))
+        if self.max_queue is not None and self.pending() >= self.max_queue:
+            if self.shed_policy == "drop-oldest":
+                self._drop_oldest()
+            else:
+                from ..core.resilience import RequestRejected
+                self.shed_count += 1
+                self.shed_by_outcome["shed-capacity"] = \
+                    self.shed_by_outcome.get("shed-capacity", 0) + 1
+                self.admission_events.append(AdmissionEvent(
+                    key=key, label=self.table.space.describe(key),
+                    required_bytes=0, available_bytes=0,
+                    queue_depth=self.pending(), outcome="shed-capacity"))
+                raise RequestRejected(
+                    f"queue full ({self.max_queue} pending); request shed",
+                    reason="shed-capacity", env=env, bucket=key)
+        dl = deadline_s if deadline_s is not None else self.default_deadline_s
+        deadline_t = None if dl is None else self._clock() + dl
+        self._queue.setdefault(key, []).append(
+            (dict(env), payload, deadline_t))
         return key
 
     def pending(self) -> int:
@@ -125,17 +219,52 @@ class BucketBatcher:
         mode it instead schedules the compile and admits against the
         conservative whole-range bound; use ``fn.warmup(envs)``
         beforehand to move even that first compile off the serving path.
+
+        Hardening hooks (when configured): expired-deadline requests are
+        shed before admission, a group inside its hold-backoff window
+        stays queued without re-checking, and a group held more than
+        ``max_hold_cycles`` drains is shed whole instead of re-enqueued
+        indefinitely.
         """
         admitted: List[BucketGroup] = []
-        held: "OrderedDict[Tuple[int, ...], List[Tuple[Dict[str, int], Any]]]" = OrderedDict()
+        held: "OrderedDict[Tuple[int, ...], List[Tuple[Dict[str, int], Any, Optional[float]]]]" = OrderedDict()
+        now = self._clock()
         order = sorted(self._queue,
                        key=lambda k: (self.table.peek(k) is None,
                                       -len(self._queue[k])))
         for key in order:
             reqs = self._queue[key]
+            # deadline shedding first: a request whose deadline passed in
+            # queue must not dispatch stale, whatever its group's fate
+            expired = [r for r in reqs if r[2] is not None and r[2] <= now]
+            if expired:
+                self._record_shed(key, expired, "shed-deadline")
+                reqs = [r for r in reqs if not (r[2] is not None
+                                                and r[2] <= now)]
+                if not reqs:
+                    self._hold_state.pop(key, None)
+                    continue
             bound = self.table.arena_bound_bytes(key)
             if self.memory_budget is not None and bound is not None \
                     and bound > self.memory_budget:
+                st = self._hold_state.get(key)
+                if st is not None and now < st[1]:
+                    held[key] = reqs      # inside the backoff window
+                    continue
+                cycles = int(st[0]) + 1 if st is not None else 1
+                if self.max_hold_cycles is not None \
+                        and cycles > self.max_hold_cycles:
+                    # aged out: shed the whole group instead of holding
+                    # it (and re-probing its bound) forever
+                    self._record_shed(key, reqs, "shed-aged",
+                                      required=bound,
+                                      available=self.memory_budget)
+                    self._hold_state.pop(key, None)
+                    continue
+                backoff = self.hold_backoff_s \
+                    * (self.hold_backoff_factor ** (cycles - 1)) \
+                    if self.hold_backoff_s else 0.0
+                self._hold_state[key] = [cycles, now + backoff]
                 # structured admission event: what was refused, what it
                 # needed, what was available, and how deep its queue is —
                 # the silent-hold observability gap this surface closes
@@ -148,17 +277,62 @@ class BucketBatcher:
                     queue_depth=len(reqs)))
                 held[key] = reqs
                 continue
+            self._hold_state.pop(key, None)
             # resident plans carry their lowered Program; peek only — a
             # group must never force a compile just to report its length
             resident = self.table.peek(key)
             admitted.append(BucketGroup(
                 key=key, label=self.table.space.describe(key),
-                envs=[e for e, _ in reqs], payloads=[p for _, p in reqs],
+                envs=[e for e, _, _ in reqs],
+                payloads=[p for _, p, _ in reqs],
                 arena_bound_bytes=bound,
                 n_instructions=None if resident is None
                 else resident.n_instructions))
         self._queue = held
         return admitted
+
+    def take_shed(self) -> List[Tuple[Tuple[int, ...], Dict[str, int],
+                                      Any, str]]:
+        """Drain the shed-request record: ``(key, env, payload, outcome)``
+        per shed request, oldest first.  A serve loop calls this after
+        ``drain()`` to answer the clients whose requests were shed."""
+        out = list(self._shed)
+        self._shed.clear()
+        return out
+
+    def process(self, groups: Optional[List[BucketGroup]] = None
+                ) -> List[Dict[str, Any]]:
+        """Drain (unless given ``groups``) and run every admitted request
+        through the function — the hardened serve inner loop.
+
+        Each payload is treated as the request's call arguments (a tuple
+        is splatted, anything else passed as the single argument).  Only
+        the structured :class:`~repro.core.resilience.RequestFailed` is
+        caught — with resilience enabled one failing request yields a
+        structured outcome instead of killing the loop, while unexpected
+        exceptions still propagate loudly.  Returns one outcome dict per
+        request: ``env``, ``bucket``, ``payload``, ``ok``, and ``value``
+        + ``report`` + ``arena_bound`` (success) or ``error`` (failure).
+        """
+        from ..core.resilience import RequestFailed
+        if groups is None:
+            groups = self.drain()
+        outcomes: List[Dict[str, Any]] = []
+        for g in groups:
+            for env, payload in zip(g.envs, g.payloads):
+                base = {"env": env, "bucket": g.key, "payload": payload}
+                try:
+                    args = payload if isinstance(payload, tuple) \
+                        else (payload,)
+                    value = self.fn(*args)
+                    outcomes.append(dict(
+                        base, ok=True, value=value,
+                        report=self.fn.last_report,
+                        arena_bound=getattr(self.fn, "last_arena_bound",
+                                            None)))
+                except RequestFailed as e:
+                    outcomes.append(dict(base, ok=False, error=e))
+        return outcomes
 
     def metrics_text(self, prefix: str = "repro") -> str:
         """Prometheus text metrics for this batcher + its function:

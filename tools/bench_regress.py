@@ -68,6 +68,13 @@ KINDS: Dict[str, Tuple[str, List[Tuple[str, bool]]]] = {
         ("peak_over_bound", False),
         ("disabled_over_base", False),   # the <=2% telemetry contract
     ]),
+    "resilience": ("BENCH_resilience.json", [
+        # one transient-retry call / healthy call on the same plan —
+        # ladder bookkeeping cost; the bench itself hard-asserts the
+        # disabled-path <=2% contract and retry/quarantine invariants
+        ("degraded_over_healthy", False),
+        ("faults_mapped_frac", True),    # fired faults with structured records
+    ]),
 }
 
 
